@@ -1,0 +1,40 @@
+"""Benchmark utilities: timing, CSV emission, shared workloads."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "emit", "rand"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) after warmup (jit-compiles)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+_rng = np.random.default_rng(0)
+
+
+def rand(shape, dtype=np.float32):
+    import jax.numpy as jnp
+
+    return jnp.asarray(_rng.standard_normal(shape).astype(dtype))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    """One CSV row: name,us_per_call,derived."""
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(row, flush=True)
+    return row

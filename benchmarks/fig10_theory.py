@@ -1,0 +1,54 @@
+"""Paper Fig. 10: theoretical vs experimental running time.
+
+Calibrates the two cost-model constants (t_flop from a leaf matmul
+micro-benchmark, t_elem from a block-add micro-benchmark) — the same
+implicit normalization the paper applies — then reports predicted vs
+measured wall-clock for a grid of (n, depth) and their Pearson r.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, rand, time_fn
+from repro.core.cost_model import CostModel, total_cost
+from repro.core.strassen import strassen_matmul
+
+GRID = [(512, 1), (512, 2), (512, 3), (1024, 1), (1024, 2), (1024, 3), (2048, 2)]
+
+
+def calibrate() -> CostModel:
+    """t_flop from a 256^3 matmul; t_elem from a 1M-element add."""
+    m = 256
+    a, b = rand((m, m)), rand((m, m))
+    t_mm = time_fn(jax.jit(lambda x, y: x @ y), a, b)
+    t_flop = t_mm / m**3
+
+    v = rand((1024, 1024))
+    t_add = time_fn(jax.jit(lambda x: x + x), v)
+    t_elem = t_add / v.size
+    return CostModel(t_flop=t_flop, t_elem=t_elem)
+
+
+def run():
+    model = calibrate()
+    rows = [
+        emit("fig10/calibration/t_flop", model.t_flop, "s_per_flop"),
+        emit("fig10/calibration/t_elem", model.t_elem, "s_per_elem"),
+    ]
+    preds, meas = [], []
+    for n, depth in GRID:
+        a, b = rand((n, n)), rand((n, n))
+        t = time_fn(jax.jit(functools.partial(strassen_matmul, depth=depth)), a, b)
+        pred = total_cost("stark", n, 2**depth, cores=1, model=model)
+        preds.append(pred)
+        meas.append(t)
+        rows.append(
+            emit(f"fig10/stark/n{n}/b{2**depth}", t, f"pred_s={pred:.5f}")
+        )
+    r = float(np.corrcoef(np.log(preds), np.log(meas))[0, 1])
+    rows.append(emit("fig10/pearson_r_log", 0.0, f"r={r:.3f}"))
+    return rows

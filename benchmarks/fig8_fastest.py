@@ -1,0 +1,49 @@
+"""Paper Fig. 8: fastest wall-clock time vs matrix size, per system.
+
+Systems (CPU-measurable analogues on this container):
+  naive    — XLA's jnp.dot (the MLLib/Marlin leaf engine: one BLAS call;
+             both baselines do b^3 block multiplications of this kind)
+  stark    — batched-BFS Strassen (core.strassen), best depth per size
+  winograd — beyond-paper variant (7 mults, fewer adds)
+
+Like the paper, we report each system's best time over its tunable
+parameter (depth = log2 partition size). Paper sizes 4096..16384 are run
+scaled-down (256..2048) for single-core CPU measurability; the cost model
+(fig10) extrapolates to the paper's cluster scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, rand, time_fn
+from repro.core.strassen import strassen_matmul
+
+SIZES = (256, 512, 1024, 2048)
+DEPTHS = (1, 2, 3)
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        a, b = rand((n, n)), rand((n, n))
+        t_naive = time_fn(jax.jit(lambda x, y: x @ y), a, b)
+        rows.append(emit(f"fig8/naive/n{n}", t_naive, "depth=0"))
+        for scheme in ("strassen", "winograd"):
+            best, best_d = None, None
+            for depth in DEPTHS:
+                fn = jax.jit(
+                    functools.partial(strassen_matmul, depth=depth, scheme=scheme)
+                )
+                t = time_fn(fn, a, b)
+                if best is None or t < best:
+                    best, best_d = t, depth
+            label = "stark" if scheme == "strassen" else "winograd"
+            rows.append(
+                emit(
+                    f"fig8/{label}/n{n}", best,
+                    f"best_depth={best_d};vs_naive={t_naive / best:.2f}x",
+                )
+            )
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 9: running time vs partition size (U-curve), per matrix size.
+
+Partition size b = 2**depth. The paper finds a U: too few partitions ->
+big leaf multiplications dominate; too many -> divide/combine overhead
+dominates. The same tradeoff appears here as recursion depth: deeper =
+smaller leaf matmuls (less O(n^3) work) but more divide/combine passes
+(more O(n^2) memory traffic).
+
+Emits measured times AND the paper cost model's prediction for the same
+(n, b) so fig10 can correlate them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, rand, time_fn
+from repro.core.cost_model import CostModel, total_cost
+from repro.core.strassen import strassen_matmul
+
+SIZES = (512, 1024)
+DEPTHS = (0, 1, 2, 3, 4)
+
+
+def run(calibrated: CostModel | None = None):
+    model = calibrated or CostModel(t_flop=2e-10, t_elem=1e-9)
+    rows = []
+    for n in SIZES:
+        a, b = rand((n, n)), rand((n, n))
+        for depth in DEPTHS:
+            fn = jax.jit(functools.partial(strassen_matmul, depth=depth))
+            t = time_fn(fn, a, b)
+            theory = total_cost("stark", n, 2**depth, cores=1, model=model) if depth else None
+            rows.append(
+                emit(
+                    f"fig9/stark/n{n}/b{2**depth}", t,
+                    f"theory_s={theory:.4f}" if theory else "theory_s=na",
+                )
+            )
+    return rows

@@ -1,0 +1,49 @@
+"""Roofline table: aggregates experiments/dryrun/*.json into §Roofline rows.
+
+Not a timing benchmark — emits one row per dry-run cell with the three
+roofline terms, dominant bottleneck, and useful-FLOP fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(pattern: str = "*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    rows = []
+    for cell in load_cells():
+        if cell.get("workload") == "paper_matmul":
+            name = f"roofline/matmul_n{cell['n']}/{cell['strategy']}/{cell['mesh']}"
+        else:
+            tag = f":{cell['tag']}" if cell.get("tag") else ""
+            name = f"roofline/{cell.get('arch','?')}{tag}/{cell.get('shape','?')}/{cell.get('mesh','?')}"
+        if cell.get("skipped"):
+            rows.append(emit(name, 0.0, "skipped"))
+            continue
+        r = cell["roofline"]
+        uf = cell.get("useful_fraction")
+        rows.append(
+            emit(
+                name,
+                r["bound_s"],  # seconds of the binding term
+                f"bottleneck={r['bottleneck']};compute={r['compute_s']:.2e};"
+                f"memory={r['memory_s']:.2e};collective={r['collective_s']:.2e};"
+                f"useful={uf:.3f}" if uf is not None else f"bottleneck={r['bottleneck']}",
+            )
+        )
+    if not rows:
+        rows.append(emit("roofline/none", 0.0, "run repro.launch.dryrun first"))
+    return rows

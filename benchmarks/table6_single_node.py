@@ -1,0 +1,47 @@
+"""Paper Table VI: single-node systems vs Stark.
+
+Analogue mapping on this container:
+  numpy-BLAS   — Colt/JBlas/ParallelColt class (optimized native library)
+  serial-naive — the paper's three-loop naive (jnp.dot WITHOUT fusion is
+                 already BLAS; we use an explicit einsum on fp64 as the
+                 unoptimized stand-in)
+  serial-strassen — paper Algorithm 1 (strassen_recursive)
+  stark        — batched-BFS Strassen under jit (the distributed pipeline
+                 on one device)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, rand, time_fn
+from repro.core.strassen import strassen_matmul, strassen_recursive
+
+SIZES = (256, 512, 1024)
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        a, b = rand((n, n)), rand((n, n))
+        an, bn = np.asarray(a), np.asarray(b)
+
+        t_blas = time_fn(lambda: jnp.asarray(an @ bn))
+        rows.append(emit(f"table6/numpy_blas/n{n}", t_blas))
+
+        t_rec = time_fn(
+            jax.jit(functools.partial(strassen_recursive, threshold=max(n // 8, 64))),
+            a, b,
+        )
+        rows.append(emit(f"table6/serial_strassen/n{n}", t_rec))
+
+        t_stark = time_fn(
+            jax.jit(functools.partial(strassen_matmul, depth=2)), a, b
+        )
+        rows.append(
+            emit(f"table6/stark/n{n}", t_stark, f"vs_blas={t_blas/t_stark:.2f}x")
+        )
+    return rows

@@ -1,0 +1,51 @@
+"""Distributed Strassen on a multi-device mesh (the paper's cluster demo).
+
+Forces 8 host CPU devices (re-execs with XLA_FLAGS if needed), builds a
+(4 data x 2 model) mesh, and runs all three distribution strategies:
+  * strassen_bfs_sharded — Stark/CAPS BFS leaf-batch sharding
+  * strassen_2d          — Luo & Drake Strassen-2D (2D-parallel leaves)
+  * strassen_shardmap    — explicit-collective 7-way level (on a 7-mesh)
+
+Run: PYTHONPATH=src python examples/strassen_distributed.py
+"""
+import os
+import sys
+
+if os.environ.get("XLA_FLAGS", "").find("host_platform_device_count") < 0:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import strassen_2d, strassen_bfs_sharded, strassen_shardmap
+
+print(f"devices: {jax.device_count()}")
+rng = np.random.default_rng(1)
+a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+want = a @ b
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+bfs = jax.jit(functools.partial(strassen_bfs_sharded, mesh=mesh, depth=2))
+got = bfs(a, b)
+print(f"bfs_sharded   max|err| = {float(jnp.max(jnp.abs(got - want))):.3e}")
+
+s2d = jax.jit(functools.partial(strassen_2d, mesh=mesh, depth=1))
+got = s2d(a, b)
+print(f"strassen_2d   max|err| = {float(jnp.max(jnp.abs(got - want))):.3e}")
+
+mesh7 = jax.make_mesh((7,), ("mult",), axis_types=(jax.sharding.AxisType.Auto,))
+smap = jax.jit(functools.partial(strassen_shardmap, mesh=mesh7))
+got = smap(a, b)
+print(f"shardmap(7)   max|err| = {float(jnp.max(jnp.abs(got - want))):.3e}")
+
+# show the collective footprint of the BFS pipeline
+txt = bfs.lower(a, b).compile().as_text()
+from repro.launch.roofline import collective_bytes
+print("collective bytes (bfs, depth=2):", collective_bytes(txt))

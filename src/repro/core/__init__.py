@@ -1,0 +1,38 @@
+"""Core library: the paper's contribution (distributed Strassen matmul).
+
+Public API:
+  coefficients  — Strassen/Winograd/naive8 schemes as constant matrices
+  strassen      — serial recursive + batched-BFS Strassen
+  distributed   — mesh-sharded variants (BFS-sharded, Strassen-2D, shard_map)
+  backend       — pluggable matmul routing used by all model layers
+  cost_model    — the paper's §IV stage-wise analytical cost model
+"""
+from repro.core.coefficients import STRASSEN, WINOGRAD, NAIVE8, Scheme, get_scheme
+from repro.core.strassen import (
+    strassen_matmul,
+    strassen_recursive,
+    divide_level,
+    combine_level,
+    split_quadrants,
+    merge_quadrants,
+    leaf_count,
+)
+from repro.core.backend import MatmulBackend, matmul, NAIVE_BACKEND
+
+__all__ = [
+    "STRASSEN",
+    "WINOGRAD",
+    "NAIVE8",
+    "Scheme",
+    "get_scheme",
+    "strassen_matmul",
+    "strassen_recursive",
+    "divide_level",
+    "combine_level",
+    "split_quadrants",
+    "merge_quadrants",
+    "leaf_count",
+    "MatmulBackend",
+    "matmul",
+    "NAIVE_BACKEND",
+]

@@ -1,0 +1,134 @@
+"""Pluggable matmul backend: routes model-layer matmuls through Strassen.
+
+This is how the paper's technique becomes a first-class framework feature:
+every dense projection in :mod:`repro.models` calls :func:`matmul` with the
+config's :class:`MatmulBackend`. The backend decides — per call site and
+per shape — whether to run the naive XLA matmul (MLLib/Marlin regime), the
+batched-BFS Strassen pipeline (Stark regime), or the Pallas-fused variant.
+
+The crossover logic mirrors the paper's empirical finding (§V-C): Strassen
+wins only when matrix dims are large relative to the leaf block size; below
+``min_dim`` the divide/combine overhead dominates and we fall back to the
+naive path (exactly like Stark's ``threshold`` leaf cutoff).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coefficients import get_scheme
+from repro.core.strassen import strassen_matmul
+
+__all__ = ["MatmulBackend", "matmul", "NAIVE_BACKEND"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBackend:
+    """Configuration for routing matmuls.
+
+    Attributes:
+      kind: 'naive' | 'strassen' | 'winograd' | 'strassen_fused'.
+      depth: Strassen recursion depth (paper's p - q). Ignored for naive.
+      min_dim: minimum of (M, K, N) below which the call falls back to the
+        naive matmul (the paper's leaf threshold / crossover point).
+      precision: jax precision for leaf matmuls ('default' | 'highest'...).
+    """
+
+    kind: str = "naive"
+    depth: int = 1
+    min_dim: int = 1024
+    precision: Optional[str] = None
+
+    @property
+    def scheme_name(self) -> str:
+        if self.kind in ("strassen", "strassen_fused"):
+            return "strassen"
+        if self.kind == "winograd":
+            return "winograd"
+        raise ValueError(f"no scheme for backend kind {self.kind!r}")
+
+    def effective_depth(self, m: int, k: int, n: int) -> int:
+        """Largest usable depth: dims must stay divisible and above min_dim."""
+        if self.kind == "naive" or self.depth <= 0:
+            return 0
+        depth = 0
+        while (
+            depth < self.depth
+            and m % 2 == 0
+            and k % 2 == 0
+            and n % 2 == 0
+            and min(m, k, n) >= self.min_dim
+        ):
+            m, k, n = m // 2, k // 2, n // 2
+            depth += 1
+        return depth
+
+
+NAIVE_BACKEND = MatmulBackend(kind="naive")
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    backend: MatmulBackend = NAIVE_BACKEND,
+    w_logical=None,
+) -> jax.Array:
+    """``x @ w`` routed through the configured backend.
+
+    Args:
+      x: (..., K) activations — leading dims are flattened into M.
+      w: (K, N) weights.
+      backend: routing config.
+      w_logical: optional (in_logical, out_logical) names for w's dims
+        (e.g. ("fsdp", "d_ff")). When set, the Strassen pipeline pins every
+        divide/leaf/combine level to the caller's tensor-parallel layout —
+        without this GSPMD loses the sharding at the quadrant reshapes and
+        silently replicates the leaf products (hypothesis log, EXPERIMENTS
+        §Perf iteration 3).
+
+    Returns:
+      (..., N), same dtype as the naive path would produce.
+    """
+    if w.ndim != 2 or x.shape[-1] != w.shape[0]:
+        raise ValueError(f"bad shapes {x.shape} @ {w.shape}")
+    *lead, k = x.shape
+    n = w.shape[1]
+    m = 1
+    for d in lead:
+        m *= d
+
+    depth = backend.effective_depth(m, k, n) if backend.kind != "naive" else 0
+    if depth == 0:
+        return jnp.matmul(x, w, precision=backend.precision)
+
+    x2 = x.reshape(m, k)
+    if backend.kind == "strassen_fused":
+        # Pallas-fused path: divide/combine folded into the leaf kernel.
+        from repro.kernels.strassen import ops as strassen_ops
+
+        out = strassen_ops.strassen_matmul_fused(
+            x2, w, depth=depth, precision=backend.precision
+        )
+    else:
+        from repro.models.sharding import constrain
+
+        c_a = c_b = c_out = None
+        if w_logical is not None:
+            w_in, w_out = w_logical
+            c_a = lambda t: constrain(t, None, "batch", None)
+            c_b = lambda t: constrain(t, None, w_in, w_out)
+            c_out = lambda t: constrain(t, None, "batch", w_out)
+        out = strassen_matmul(
+            x2,
+            w,
+            depth=depth,
+            scheme=backend.scheme_name,
+            precision=backend.precision,
+            constrain_a=c_a,
+            constrain_b=c_b,
+            constrain_out=c_out,
+        )
+    return out.reshape(*lead, n)

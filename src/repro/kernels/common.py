@@ -1,0 +1,47 @@
+"""Shared Pallas kernel utilities.
+
+This container is CPU-only: TPU is the compilation TARGET, not the runtime.
+Every kernel accepts ``interpret=`` and defaults to interpret mode when no
+TPU is present, so the same call sites run (slowly, but bit-faithfully at
+the algorithm level) on CPU and compile to Mosaic on a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+__all__ = ["default_interpret", "pick_block", "cdiv"]
+
+
+@functools.lru_cache(None)
+def default_interpret() -> bool:
+    """True when the default backend has no TPU (interpret the kernel)."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_block(dim: int, preferred: int, align: int = 128) -> int:
+    """Largest block <= preferred that divides dim, preferring MXU alignment.
+
+    TPU MXU wants the trailing two tile dims in multiples of (8, 128) for
+    fp32 and (16, 128) for bf16; ``preferred`` should already be a multiple
+    of 128. For small test shapes we fall back to the dim itself.
+    """
+    if dim <= preferred:
+        return dim
+    b = preferred
+    while b >= align:
+        if dim % b == 0:
+            return b
+        b -= align
+    # No aligned divisor — fall back to any divisor (interpret-mode tests).
+    b = preferred
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b -= 1
+    return 1

@@ -1,0 +1,39 @@
+"""Jitted public wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=True,
+    window=None,
+    scale=None,
+    block_q=512,
+    block_k=512,
+    interpret=None,
+):
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )

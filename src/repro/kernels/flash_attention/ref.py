@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Naive masked attention with GQA kv-head broadcast; fp32 math."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        precision="highest",
+    ) * scale
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= rows - cols < window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32), precision="highest")
+    return out.astype(q.dtype)

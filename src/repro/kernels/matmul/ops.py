@@ -1,0 +1,28 @@
+"""Jitted public wrappers for the matmul kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.matmul.matmul import batched_matmul_pallas, matmul_pallas
+
+__all__ = ["matmul", "batched_matmul"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(a, b, *, block_m=256, block_n=256, block_k=256, interpret=None):
+    return matmul_pallas(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def batched_matmul(a, b, *, block_m=256, block_n=256, block_k=256, interpret=None):
+    return batched_matmul_pallas(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )

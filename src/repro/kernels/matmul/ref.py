@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the matmul kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32), precision="highest"
+    ).astype(out_dtype)
+
+
+def batched_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.einsum(
+        "mij,mjk->mik",
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        precision="highest",
+    ).astype(out_dtype)

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the RMSNorm kernel (any leading dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+__all__ = ["rmsnorm"]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps=1e-6, block_rows=256, interpret=None):
+    *lead, d = x.shape
+    rows = 1
+    for s in lead:
+        rows *= s
+    out = rmsnorm_pallas(
+        x.reshape(rows, d), w, eps=eps, block_rows=block_rows, interpret=interpret
+    )
+    return out.reshape(*lead, d)

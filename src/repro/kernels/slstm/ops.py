@@ -1,0 +1,15 @@
+"""Jitted wrapper for the fused sLSTM sequence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.slstm.slstm import slstm_seq_pallas
+
+__all__ = ["slstm_seq"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def slstm_seq(wx, r, state, *, interpret=None):
+    return slstm_seq_pallas(wx, r, state, interpret=interpret)

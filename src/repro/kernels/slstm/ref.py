@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused sLSTM kernel: the models/xlstm scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_seq_ref(wx: jax.Array, r: jax.Array, state: dict):
+    """wx (B,S,4,H,dh); r (4,H,dh,dh); state {c,n,m,h} (B,H,dh) fp32."""
+    from repro.models.xlstm import _slstm_step
+
+    wx32 = wx.astype(jnp.float32)
+    new_state, hs = jax.lax.scan(
+        lambda c, w_t: _slstm_step(r.astype(jnp.float32), c, w_t),
+        dict(state),
+        jnp.moveaxis(wx32, 1, 0),
+    )
+    return new_state, jnp.moveaxis(hs, 0, 1)  # (B, S, H, dh)

@@ -1,0 +1,117 @@
+"""Fused sLSTM sequence kernel — the hillclimb-identified "next lever".
+
+EXPERIMENTS.md §Perf cell 1: after the chunkwise mLSTM fix, xlstm
+train_4k's residual memory term is the sLSTM layers' sequential scan —
+~200k tiny XLA steps, each round-tripping the (B, H, dh) state quadruple
+through HBM. TPU Pallas grid iterations execute SEQUENTIALLY on a core,
+and scratch persists across them: this kernel walks the time axis as the
+grid, keeps (c, n, m, h) in VMEM scratch for the whole sequence, and
+touches HBM only for the per-step input preactivations and the h output
+— state HBM traffic drops from O(S) round trips to zero.
+
+Layout: wx (B, S, 4, H, dh) input preactivations (z/i/f/o order),
+r (4, H, dh, dh) per-head recurrent mixing, state (B, H, dh) x4.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret
+
+__all__ = ["slstm_seq_pallas"]
+
+
+def _slstm_kernel(
+    wx_ref, r_ref, c0_ref, n0_ref, m0_ref, h0_ref,
+    hs_ref, cf_ref, nf_ref, mf_ref, hf_ref,
+    c_s, n_s, m_s, h_s,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        c_s[...] = c0_ref[...].astype(jnp.float32)
+        n_s[...] = n0_ref[...].astype(jnp.float32)
+        m_s[...] = m0_ref[...].astype(jnp.float32)
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+
+    wx = wx_ref[:, 0].astype(jnp.float32)  # (B, 4, H, dh)
+    r = r_ref[...].astype(jnp.float32)  # (4, H, dh, dh)
+    h_prev = h_s[...]  # (B, H, dh)
+
+    # recurrent mixing: (B,H,dh) x (4,H,dh,dh) -> (B,4,H,dh)
+    rec = jax.lax.dot_general(
+        h_prev, r,
+        (((2,), (2,)), ((1,), (1,))),  # contract dh; batch over H
+        preferred_element_type=jnp.float32,
+    )  # (H, B, 4, dh)
+    rec = jnp.transpose(rec, (1, 2, 0, 3))  # (B, 4, H, dh)
+    pre = wx + rec
+
+    z = jnp.tanh(pre[:, 0])
+    i_pre = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m_s[...], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m_s[...] - m_new)
+    c_new = f_g * c_s[...] + i_g * z
+    n_new = f_g * n_s[...] + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+
+    c_s[...] = c_new
+    n_s[...] = n_new
+    m_s[...] = m_new
+    h_s[...] = h_new
+    hs_ref[:, 0] = h_new.astype(hs_ref.dtype)
+
+    @pl.when(t == pl.num_programs(0) - 1)
+    def _flush():
+        cf_ref[...] = c_new.astype(cf_ref.dtype)
+        nf_ref[...] = n_new.astype(nf_ref.dtype)
+        mf_ref[...] = m_new.astype(mf_ref.dtype)
+        hf_ref[...] = h_new.astype(hf_ref.dtype)
+
+
+def slstm_seq_pallas(
+    wx: jax.Array,  # (B, S, 4, H, dh)
+    r: jax.Array,  # (4, H, dh, dh)
+    state: dict,  # {c, n, m, h}: (B, H, dh) fp32
+    *,
+    interpret: Optional[bool] = None,
+) -> Tuple[dict, jax.Array]:
+    """Run the full sLSTM sequence in one kernel; returns (state, hs)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, s, four, h, dh = wx.shape
+    assert four == 4, wx.shape
+    state_shape = jax.ShapeDtypeStruct((b, h, dh), jnp.float32)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),  # hs
+        state_shape, state_shape, state_shape, state_shape,
+    )
+    grid = (s,)
+    full_state_spec = pl.BlockSpec((b, h, dh), lambda t: (0, 0, 0))
+    hs, cf, nf, mf, hf = pl.pallas_call(
+        _slstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, 1, 4, h, dh), lambda t: (0, t, 0, 0, 0)),
+            pl.BlockSpec((4, h, dh, dh), lambda t: (0, 0, 0, 0)),
+            full_state_spec, full_state_spec, full_state_spec, full_state_spec,
+        ],
+        out_specs=(
+            pl.BlockSpec((b, 1, h, dh), lambda t: (0, t, 0, 0)),
+            full_state_spec, full_state_spec, full_state_spec, full_state_spec,
+        ),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((b, h, dh), jnp.float32)] * 4,
+        interpret=interpret,
+    )(wx, r, state["c"], state["n"], state["m"], state["h"])
+    return {"c": cf, "n": nf, "m": mf, "h": hf}, hs

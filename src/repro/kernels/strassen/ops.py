@@ -1,0 +1,94 @@
+"""Jitted public wrappers composing the fused Strassen kernels.
+
+Three pipelines, in increasing distance from the paper:
+
+* :func:`strassen_matmul_stages` — paper-faithful staging (every divide /
+  combine level materialized, like Stark's shuffles) but with each stage's
+  adds fused by the divide/combine kernels and leaves on the MXU kernel.
+* :func:`strassen_matmul_fused`  — the beyond-paper pipeline: unrolled
+  einsum levels down to the last, which runs entirely in-kernel
+  (divide + 7 products + combine per tile). Used by backend 'strassen_fused'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coefficients import STRASSEN, get_scheme
+from repro.core.strassen import (
+    combine_level,
+    divide_level,
+    merge_quadrants,
+    split_quadrants,
+)
+from repro.kernels.matmul.matmul import batched_matmul_pallas
+from repro.kernels.strassen.strassen import (
+    combine_pallas,
+    divide_pallas,
+    strassen1_matmul_pallas,
+)
+
+__all__ = ["strassen_matmul_stages", "strassen_matmul_fused"]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "scheme_name", "interpret"))
+def strassen_matmul_stages(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    depth: int = 1,
+    scheme_name: str = "strassen",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Stage-by-stage Stark pipeline with per-stage Pallas kernels."""
+    scheme = get_scheme(scheme_name)
+    ta, tb = a[None], b[None]
+    for _ in range(depth):
+        ta = divide_pallas(split_quadrants(ta), scheme.a_coef, interpret=interpret)
+        ta = ta.reshape(-1, *ta.shape[2:])
+        tb = divide_pallas(split_quadrants(tb), scheme.b_coef, interpret=interpret)
+        tb = tb.reshape(-1, *tb.shape[2:])
+    prod = batched_matmul_pallas(ta, tb, interpret=interpret)
+    for _ in range(depth):
+        grouped = prod.reshape(-1, scheme.n_mults, *prod.shape[1:])
+        quads = combine_pallas(grouped, scheme.c_coef, interpret=interpret)
+        prod = merge_quadrants(quads)
+    return prod[0]
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "scheme_name", "interpret", "precision"))
+def strassen_matmul_fused(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    depth: int = 1,
+    scheme_name: str = "strassen",
+    interpret: Optional[bool] = None,
+    precision: Optional[str] = None,
+) -> jax.Array:
+    """Fused pipeline: last level runs fully in-kernel (DFS step in VMEM).
+
+    depth-1 outer levels are unrolled einsums (BFS levels, shardable);
+    the final level never materializes its 7/4x intermediates.
+    """
+    if depth < 1:
+        raise ValueError("fused pipeline needs depth >= 1")
+    scheme = get_scheme(scheme_name)
+    a_coef = jnp.asarray(scheme.a_coef)
+    b_coef = jnp.asarray(scheme.b_coef)
+    c_coef = jnp.asarray(scheme.c_coef)
+
+    ta, tb = a[None], b[None]
+    for _ in range(depth - 1):
+        ta = divide_level(ta, a_coef)
+        tb = divide_level(tb, b_coef)
+    cq = strassen1_matmul_pallas(
+        split_quadrants(ta), split_quadrants(tb), scheme=scheme, interpret=interpret
+    )
+    prod = merge_quadrants(cq)
+    for _ in range(depth - 1):
+        prod = combine_level(prod, c_coef)
+    return prod[0]

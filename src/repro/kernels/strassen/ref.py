@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the fused Strassen kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coefficients import Scheme, STRASSEN, get_scheme
+from repro.core.strassen import merge_quadrants, split_quadrants
+
+
+def divide_ref(x: jax.Array, coef: np.ndarray) -> jax.Array:
+    """(m, 4, h, w) -> (m, r, h, w) via plain einsum."""
+    return jnp.einsum("pq,mqij->mpij", jnp.asarray(coef, x.dtype), x)
+
+
+def combine_ref(products: jax.Array, c_coef: np.ndarray) -> jax.Array:
+    """(m, r, h, w) -> (m, 4, h, w) via plain einsum."""
+    return jnp.einsum("kp,mpij->mkij", jnp.asarray(c_coef, products.dtype), products)
+
+
+def strassen1_matmul_ref(
+    aq: jax.Array, bq: jax.Array, scheme: Scheme | str = STRASSEN, out_dtype=None
+) -> jax.Array:
+    """(mb,4,M2,K2) x (mb,4,K2,N2) -> (mb,4,M2,N2), unfused fp32 pipeline."""
+    if isinstance(scheme, str):
+        scheme = get_scheme(scheme)
+    out_dtype = out_dtype or aq.dtype
+    a32, b32 = aq.astype(jnp.float32), bq.astype(jnp.float32)
+    left = divide_ref(a32, scheme.a_coef)
+    right = divide_ref(b32, scheme.b_coef)
+    prods = jnp.einsum("mpij,mpjk->mpik", left, right, precision="highest")
+    return combine_ref(prods, scheme.c_coef).astype(out_dtype)
+
+
+def strassen1_full_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Direct (M,K)@(K,N) oracle for the whole fused op (single leaf)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32), precision="highest"
+    ).astype(out_dtype)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production mesh on
+# CPU placeholder devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with ZERO device allocation (ShapeDtypeStruct
+stand-ins):
+  * compiled = jit(step).lower(specs).compile() on the production mesh —
+    success proves the sharding config is coherent (no mismatched
+    collectives, no uneven jit-input shardings);
+  * compiled.memory_analysis()  -> per-device bytes (fits-in-HBM evidence);
+  * compiled.cost_analysis()    -> FLOPs / bytes for the roofline terms;
+  * parsed collective bytes from the post-SPMD HLO (launch/roofline.py).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json, which
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline_table.py read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch whisper_tiny --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, skip_reason
+from repro.core.backend import MatmulBackend
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import HW, collective_bytes, model_flops, roofline_terms
+from repro.launch.specs import serve_cell_specs, train_cell_specs
+from repro.models import model as M
+from repro.models.sharding import DEFAULT_RULES, ShardingRules, use_sharding
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+TRAIN_ACCUM = 8  # grad-accumulation microbatches for train cells
+# Per-arch overrides: larger models need smaller microbatches to fit HBM.
+ACCUM_OVERRIDES = {"qwen2_vl_72b": 16, "qwen1_5_32b": 16, "internlm2_20b": 16}
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    backend: Optional[MatmulBackend] = None,
+    rules: ShardingRules = DEFAULT_RULES,
+    accum: int = TRAIN_ACCUM,
+):
+    """Returns (lowered, compiled, meta) for one cell."""
+    mesh = _mesh(mesh_kind)
+    cfg = get_config(arch)
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, matmul_backend=backend)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+
+    with use_sharding(mesh, rules):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            state_shapes, batch_shapes, state_sh, batch_sh = train_cell_specs(
+                cfg, shape, mesh, opt_cfg, rules
+            )
+            # microbatch must stay >= the batch-shard count, or activations
+            # fall back to replicated (divisibility rule) and per-device
+            # work explodes.
+            batch_shards = 1
+            for ax in rules.rules.get("batch", ()):
+                batch_shards *= mesh.shape.get(ax, 1)
+            accum = max(1, min(accum, shape.global_batch // max(batch_shards, 1)))
+            step = make_train_step(cfg, opt_cfg, accum_steps=accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            params_shapes, cache_shapes, batch_shapes, params_sh, cache_sh, batch_sh = (
+                serve_cell_specs(cfg, shape, mesh, rules)
+            )
+
+            def prefill_fn(params, batch, cache):
+                return M.apply_prefill(params, batch, cache, cfg)
+
+            jitted = jax.jit(
+                prefill_fn,
+                in_shardings=(params_sh, batch_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_shapes, batch_shapes, cache_shapes)
+        else:  # decode
+            params_shapes, cache_shapes, batch_shapes, params_sh, cache_sh, batch_sh = (
+                serve_cell_specs(cfg, shape, mesh, rules)
+            )
+            if cfg.mrope:
+
+                def decode_fn(params, tokens, positions, cache):
+                    return M.apply_decode(
+                        params, tokens, cache, cfg, positions=positions
+                    )
+
+                jitted = jax.jit(
+                    decode_fn,
+                    in_shardings=(
+                        params_sh, batch_sh["tokens"], batch_sh["positions"], cache_sh,
+                    ),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(3,),
+                )
+                lowered = jitted.lower(
+                    params_shapes,
+                    batch_shapes["tokens"],
+                    batch_shapes["positions"],
+                    cache_shapes,
+                )
+            else:
+
+                def decode_fn(params, tokens, cache):
+                    return M.apply_decode(params, tokens, cache, cfg)
+
+                jitted = jax.jit(
+                    decode_fn,
+                    in_shardings=(params_sh, batch_sh["tokens"], cache_sh),
+                    out_shardings=(None, cache_sh),
+                    donate_argnums=(2,),
+                )
+                lowered = jitted.lower(
+                    params_shapes, batch_shapes["tokens"], cache_shapes
+                )
+
+        compiled = lowered.compile()
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "kind": shape.kind,
+        "accum": accum if shape.kind == "train" else None,
+        "backend": (backend.kind if backend else cfg.matmul_backend.kind),
+    }
+    return lowered, compiled, meta
+
+
+def _memory_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": repr(e)}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        val = getattr(ma, attr, None)
+        if val is not None:
+            out[attr] = int(val)
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    backend: Optional[MatmulBackend] = None,
+    rules: ShardingRules = DEFAULT_RULES,
+    accum: int = TRAIN_ACCUM,
+    tag: str = "",
+) -> Dict[str, Any]:
+    """Lower+compile one cell and extract all dry-run artifacts."""
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "skipped": reason}
+
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(
+        arch, shape_name, mesh_kind, backend=backend, rules=rules, accum=accum
+    )
+    t_compile = time.time() - t0
+
+    # Execution-weighted static analysis (XLA's cost_analysis does NOT
+    # multiply while-loop bodies by trip count — see launch/hlo_analysis).
+    hlo_text = compiled.as_text()
+    costs = analyze_hlo(hlo_text)
+    xla_cost = compiled.cost_analysis() or {}
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = meta["chips"]
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = model_flops(
+        cfg.param_count(), cfg.active_param_count(), tokens, shape.kind
+    )
+    # The partitioned HLO module is the per-device program.
+    terms = roofline_terms(
+        hlo_flops=costs.dot_flops,
+        hlo_bytes=costs.hbm_bytes,
+        coll_bytes=costs.collective_bytes,
+        chips=chips,
+        per_device=True,
+    )
+    global_flops = costs.dot_flops * chips
+    result = {
+        **meta,
+        "tag": tag,
+        "compile_seconds": round(t_compile, 1),
+        "memory": _memory_dict(compiled),
+        "cost_analysis": {
+            "flops_per_device": costs.dot_flops,
+            "hbm_bytes_per_device": costs.hbm_bytes,
+            "flops_global": global_flops,
+            "xla_flops_unscaled": float(xla_cost.get("flops", 0.0)),
+        },
+        "collectives": {
+            "total": costs.collective_bytes,
+            **{k: v for k, v in costs.collective_by_kind.items()},
+        },
+        "model_flops": mf,
+        "useful_fraction": (mf / global_flops) if global_flops else None,
+        "roofline": terms,
+        "tokens": tokens,
+    }
+    return result
+
+
+def save_result(result: Dict[str, Any], out_dir: str = OUT_DIR):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"__{result['tag']}" if result.get("tag") else ""
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(result, f, indent=2, default=str)
+    return os.path.join(out_dir, name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--backend", choices=["naive", "strassen", "winograd", "strassen_fused"])
+    ap.add_argument("--depth", type=int, default=1)
+    ap.add_argument("--min-dim", type=int, default=2048)
+    ap.add_argument("--accum", type=int, default=TRAIN_ACCUM)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    backend = None
+    if args.backend and args.backend != "naive":
+        backend = MatmulBackend(kind=args.backend, depth=args.depth, min_dim=args.min_dim)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            tag = f"__{args.tag}" if args.tag else ""
+            out_name = os.path.join(
+                OUT_DIR, f"{arch}__{shape}__{mesh_kind}{tag}.json"
+            )
+            if args.skip_existing and os.path.exists(out_name):
+                print(f"[skip existing] {arch} {shape} {mesh_kind}")
+                continue
+            print(f"[dryrun] {arch} x {shape} x {mesh_kind} ...", flush=True)
+            try:
+                accum = (
+                    ACCUM_OVERRIDES.get(arch, args.accum)
+                    if args.accum == TRAIN_ACCUM
+                    else args.accum
+                )
+                result = run_cell(
+                    arch, shape, mesh_kind,
+                    backend=backend, accum=accum, tag=args.tag,
+                )
+                path = save_result(result)
+                if result.get("skipped"):
+                    print(f"  SKIPPED: {result['skipped']}")
+                else:
+                    r = result["roofline"]
+                    print(
+                        f"  ok in {result['compile_seconds']}s | "
+                        f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+                        f"collective {r['collective_s']:.3e}s -> {r['bottleneck']}"
+                    )
+                    mem = result["memory"]
+                    if "temp_size_in_bytes" in mem:
+                        print(
+                            f"  mem/device: args {mem.get('argument_size_in_bytes',0)/2**30:.2f} GiB, "
+                            f"temps {mem['temp_size_in_bytes']/2**30:.2f} GiB"
+                        )
+                print(f"  -> {path}")
+            except Exception as e:
+                failures.append((arch, shape, mesh_kind, repr(e)))
+                print(f"  FAILED: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested cells OK")
+
+
+if __name__ == "__main__":
+    main()

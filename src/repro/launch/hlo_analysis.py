@@ -1,0 +1,316 @@
+"""Static HLO analyzer with while-loop trip-count propagation.
+
+XLA's compiled.cost_analysis() counts each while-loop BODY once — for a
+scan-over-layers model with grad-accumulation that undercounts FLOPs by
+orders of magnitude (layers x accum). This analyzer parses the post-SPMD
+HLO text, recovers each while loop's trip count (XLA's own
+known_trip_count backend_config, falling back to condition-constant
+parsing), and walks the call graph multiplying nested execution counts,
+producing:
+
+  * dot_flops        — 2 * elems(out) * contraction_size per dot/conv
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+  * hbm_bytes        — a fusion-level traffic estimate: operand + result
+                       bytes of every non-trivial top-level instruction
+
+All three are EXECUTION-WEIGHTED (multiplied through loop nests), which is
+what the roofline terms need. Operand shapes are resolved through a
+per-computation symbol table (HLO operands are %name references).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCosts"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(shapes: List[Tuple[str, str]]) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 4) for dt, dims in shapes)
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    line: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr]
+    symbols: Dict[str, List[Tuple[str, str]]]  # instr name -> result shapes
+
+    def operand_shapes(self, ins: _Instr) -> List[Tuple[str, str]]:
+        out: List[Tuple[str, str]] = []
+        for nm in ins.operand_names:
+            out.extend(self.symbols.get(nm, []))
+        return out
+
+
+@dataclasses.dataclass
+class HloCosts:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hbm_bytes: float = 0.0
+    while_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def merge_scaled(self, other: "HloCosts", k: float):
+        self.dot_flops += other.dot_flops * k
+        self.collective_bytes += other.collective_bytes * k
+        for kk, v in other.collective_by_kind.items():
+            self.collective_by_kind[kk] = self.collective_by_kind.get(kk, 0.0) + v * k
+        self.hbm_bytes += other.hbm_bytes * k
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    current: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$", s)
+        if m and not line.startswith(" "):
+            current = _Comp(name=m.group(1), instrs=[], symbols={})
+            comps[current.name] = current
+            continue
+        if s == "}" and not line.startswith(" "):
+            current = None
+            continue
+        if current is None or "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        mop = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if not mop:
+            continue
+        op = mop.group(1)
+        pre, post = rhs[: mop.start()], rhs[mop.start():]
+        result_shapes = _SHAPE_RE.findall(pre)
+        # operand names inside the first balanced paren group
+        depth = 0
+        args_chars: List[str] = []
+        for ch in post[post.index("("):]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args_chars.append(ch)
+        operand_names = _OPERAND_RE.findall("".join(args_chars))
+        name = lhs.strip().lstrip("%").replace("ROOT ", "").strip()
+        if name.startswith("ROOT"):
+            name = name[4:].strip().lstrip("%")
+        ins = _Instr(
+            name=name, op=op, line=s,
+            result_shapes=result_shapes, operand_names=operand_names,
+        )
+        current.instrs.append(ins)
+        current.symbols[name] = result_shapes
+    return comps
+
+
+def _trip_count_from_cond(cond: Optional[_Comp]) -> int:
+    if cond is None:
+        return 1
+    const_vals: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                const_vals[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.op != "compare" and "compare" not in ins.line:
+            continue
+        names = ins.operand_names
+        direction = (
+            "LT" if "direction=LT" in ins.line
+            else ("LE" if "direction=LE" in ins.line else None)
+        )
+        for cand in names:
+            if cand in const_vals:
+                n = const_vals[cand]
+                if direction == "LE":
+                    n += 1
+                return max(n, 1)
+    return 1
+
+
+def _dot_flops(comp: _Comp, ins: _Instr) -> float:
+    if not ins.result_shapes or not ins.operand_names:
+        return 0.0
+    res_elems = sum(_shape_elems(dims) for _, dims in ins.result_shapes)
+    lhs_shapes = comp.symbols.get(ins.operand_names[0], [])
+    if not lhs_shapes:
+        return 2.0 * res_elems  # unknown contraction
+    lhs_dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * res_elems * k
+
+
+# ops whose operand+result bytes approximate real HBM traffic at the
+# post-fusion level. Producer result + consumer operand = write + read,
+# which is exactly the two HBM touches of a materialized buffer. Excluded:
+# reshape/bitcast/broadcast/transpose (layout-only or fused), raw
+# elementwise (wrapped into kLoop fusions by the compiler), tuple plumbing.
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy",
+    "dynamic-update-slice", "dynamic-slice", "gather", "scatter",
+    "reduce", "reduce-window", "sort", "concatenate", "pad",
+    "select-and-scatter", "cholesky", "triangular-solve",
+}
+
+
+def _analyze_comp(
+    name: str,
+    comps: Dict[str, _Comp],
+    cache: Dict[str, HloCosts],
+    stack: Tuple[str, ...] = (),
+) -> HloCosts:
+    if name in cache:
+        return cache[name]
+    comp = comps.get(name)
+    if comp is None or name in stack:
+        return HloCosts()
+    costs = HloCosts()
+    for ins in comp.instrs:
+        if ins.op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.line)
+            if mt:
+                trips = int(mt.group(1))
+            else:
+                trips = _trip_count_from_cond(comps.get(mc.group(1)) if mc else None)
+            costs.while_trip_counts[ins.name] = trips
+            if mb:
+                sub = _analyze_comp(mb.group(1), comps, cache, stack + (name,))
+                costs.merge_scaled(sub, trips)
+                for k, v in sub.while_trip_counts.items():
+                    costs.while_trip_counts[f"{ins.name}/{k}"] = v * trips
+            continue
+        if ins.op == "conditional":
+            # one branch executes per device: take the max-cost branch
+            branches = re.findall(
+                r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-,% ]+)",
+                ins.line,
+            )
+            names = []
+            for grp in branches:
+                names.extend(nm.strip().lstrip("%") for nm in grp.split(","))
+            subs = [
+                _analyze_comp(nm, comps, cache, stack + (name,)) for nm in names if nm
+            ]
+            if subs:
+                best = HloCosts(
+                    dot_flops=max(s.dot_flops for s in subs),
+                    collective_bytes=max(s.collective_bytes for s in subs),
+                    hbm_bytes=max(s.hbm_bytes for s in subs),
+                )
+                for s in subs:
+                    for kk, v in s.collective_by_kind.items():
+                        best.collective_by_kind[kk] = max(
+                            best.collective_by_kind.get(kk, 0.0), v
+                        )
+                costs.merge_scaled(best, 1.0)
+            continue
+        if ins.op in ("call", "custom-call", "async-start"):
+            for mm in re.finditer(
+                r"(?:to_apply|called_computations)=\{?%?([\w\.\-]+)",
+                ins.line,
+            ):
+                sub = _analyze_comp(mm.group(1), comps, cache, stack + (name,))
+                costs.merge_scaled(sub, 1.0)
+        if ins.op == "fusion":
+            mm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+            if mm:
+                sub = _analyze_comp(mm.group(1), comps, cache, stack + (name,))
+                # dots/collectives inside the fusion execute once per call;
+                # traffic is counted at the fusion boundary below.
+                costs.dot_flops += sub.dot_flops
+                costs.collective_bytes += sub.collective_bytes
+                for kk, v in sub.collective_by_kind.items():
+                    costs.collective_by_kind[kk] = costs.collective_by_kind.get(kk, 0.0) + v
+        if ins.op in ("dot", "convolution"):
+            costs.dot_flops += _dot_flops(comp, ins)
+        kind = next((c for c in _COLLECTIVES if ins.op.startswith(c)), None)
+        if kind and not ins.op.endswith("-done"):
+            b = _shape_bytes(comp.operand_shapes(ins))
+            costs.collective_bytes += b
+            costs.collective_by_kind[kind] = costs.collective_by_kind.get(kind, 0.0) + b
+        if ins.op in _TRAFFIC_OPS:
+            op_bytes = _shape_bytes(comp.operand_shapes(ins))
+            res_bytes = _shape_bytes(ins.result_shapes)
+            if ins.op in ("dynamic-slice", "gather") or (
+                ins.op == "fusion"
+                and "dynamic-slice" in ins.name
+                and "update" not in ins.name
+            ):
+                # reads only the slice, not the sliced operand
+                costs.hbm_bytes += 2 * res_bytes
+            elif ins.op == "dynamic-update-slice" or (
+                ins.op == "fusion" and "dynamic-update-slice" in ins.name
+            ):
+                # XLA aliases DUS in place: the full buffer appears as an
+                # operand AND the result but only the updated slice touches
+                # HBM. Stash-shaped operands (same size as the result, often
+                # via bitcast chains) are aliases, not reads — subtract all.
+                aliased = 0
+                for nm in ins.operand_names:
+                    b = _shape_bytes(comp.symbols.get(nm, []))
+                    if b and abs(b - res_bytes) < max(res_bytes // 64, 1):
+                        aliased += b
+                effective = max(op_bytes - aliased, res_bytes // 64)
+                costs.hbm_bytes += 2 * effective
+            else:
+                costs.hbm_bytes += op_bytes + res_bytes
+    cache[name] = costs
+    return costs
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> HloCosts:
+    comps = _parse_computations(text)
+    if not comps:
+        return HloCosts()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    cache: Dict[str, HloCosts] = {}
+    return _analyze_comp(entry, comps, cache)

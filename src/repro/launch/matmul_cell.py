@@ -1,0 +1,191 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run cells for the paper's OWN workload: standalone distributed matmul.
+
+Lowers naive / Strassen-BFS / Strassen-2D distributed matmuls on the
+production mesh and extracts the roofline terms — the direct analogue of
+the paper's Fig 8/9 at TPU-pod scale, and the §Perf hillclimb target most
+representative of the paper's technique (the in-layer embedding of
+Strassen is analyzed separately and refuted; see EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.matmul_cell --n 16384 \
+      --strategies naive bfs_d1 bfs_d2 bfs_d3 2d_d1 --mesh single
+"""
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import strassen_2d, strassen_bfs_sharded
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+
+def _naive(a, b, mesh):
+    """MLLib/Marlin-analogue: classic sharded matmul (8 mults per 2x2)."""
+    a = jax.lax.with_sharding_constraint(a, NamedSharding(mesh, P("data", None)))
+    b = jax.lax.with_sharding_constraint(b, NamedSharding(mesh, P(None, "model")))
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P("data", "model")))
+
+
+def _bfs_replicated(a, b, mesh, depth):
+    """CAPS 'unlimited memory' scheme: replicate inputs (n^2 fits easily),
+    run all divide levels locally (zero comm), shard the 7^depth leaf batch
+    over the WHOLE mesh, combine levels reshard downward."""
+    from repro.core.strassen import strassen_matmul
+    import jax.numpy as _jnp
+
+    rep = NamedSharding(mesh, P())
+    a = jax.lax.with_sharding_constraint(a, rep)
+    b = jax.lax.with_sharding_constraint(b, rep)
+    axes = tuple(ax for ax in ("pod", "data", "model") if ax in mesh.shape)
+    batch = NamedSharding(mesh, P(axes, None, None))
+
+    def leaf(ta, tb):
+        ta = jax.lax.with_sharding_constraint(ta, batch)
+        tb = jax.lax.with_sharding_constraint(tb, batch)
+        out = _jnp.einsum("mij,mjk->mik", ta, tb)
+        return jax.lax.with_sharding_constraint(out, batch)
+
+    out = strassen_matmul(a, b, depth=depth, leaf_fn=leaf)
+    return jax.lax.with_sharding_constraint(
+        out, NamedSharding(mesh, P("data", "model"))
+    )
+
+
+def strategy_fn(name: str, mesh):
+    if name == "naive":
+        return functools.partial(_naive, mesh=mesh)
+    if name == "shardmap1":
+        # explicit (rows x 7) grid from the same device pool (4 idle of 256)
+        import numpy as np
+        from repro.core.distributed import strassen_shardmap_2d
+
+        n_dev = mesh.devices.size
+        rows = n_dev // 7
+        devs = np.asarray(mesh.devices).reshape(-1)[: rows * 7].reshape(rows, 7)
+        grid = jax.sharding.Mesh(devs, ("rows", "mult"))
+        return functools.partial(strassen_shardmap_2d, mesh=grid)
+    if name == "shardmap3d":
+        import numpy as np
+        from repro.core.distributed import strassen_shardmap_3d
+
+        n_dev = mesh.devices.size
+        side = int((n_dev // 7) ** 0.5)  # 256//7=36 -> 6x6
+        devs = (
+            np.asarray(mesh.devices).reshape(-1)[: side * side * 7]
+            .reshape(side, side, 7)
+        )
+        grid = jax.sharding.Mesh(devs, ("rb", "cb", "mult"))
+        # block (quadrant) output layout — the paper's Block data structure
+        return functools.partial(strassen_shardmap_3d, mesh=grid, merge=False)
+    kind, _, d = name.partition("_d")
+    depth = int(d)
+    if kind == "bfs":
+        return functools.partial(strassen_bfs_sharded, mesh=mesh, depth=depth)
+    if kind == "bfsrep":
+        return functools.partial(_bfs_replicated, mesh=mesh, depth=depth)
+    if kind == "2d":
+        return functools.partial(strassen_2d, mesh=mesh, depth=depth)
+    raise ValueError(name)
+
+
+def run_cell(n: int, strategy: str, mesh_kind: str, dtype=jnp.bfloat16):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    fn = strategy_fn(strategy, mesh)
+    spec = jax.ShapeDtypeStruct((n, n), dtype)
+    if strategy in ("shardmap1", "shardmap3d"):
+        # inputs live replicated on the explicit grid submesh
+        import numpy as np
+        if strategy == "shardmap1":
+            rows = chips // 7
+            devs = np.asarray(mesh.devices).reshape(-1)[: rows * 7].reshape(rows, 7)
+            grid = jax.sharding.Mesh(devs, ("rows", "mult"))
+            chips = rows * 7
+        else:
+            side = int((chips // 7) ** 0.5)
+            devs = (
+                np.asarray(mesh.devices).reshape(-1)[: side * side * 7]
+                .reshape(side, side, 7)
+            )
+            grid = jax.sharding.Mesh(devs, ("rb", "cb", "mult"))
+            chips = side * side * 7
+        shard = NamedSharding(grid, P())
+    else:
+        shard = NamedSharding(mesh, P(("data",), None))
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=(shard, shard))
+    compiled = jitted.lower(spec, spec).compile()
+    costs = analyze_hlo(compiled.as_text())
+    terms = roofline_terms(
+        hlo_flops=costs.dot_flops,
+        hlo_bytes=costs.hbm_bytes,
+        coll_bytes=costs.collective_bytes,
+        chips=chips,
+        per_device=True,
+    )
+    ma = compiled.memory_analysis()
+    ideal = 2.0 * n**3 / chips  # useful flops per device
+    result = {
+        "workload": "paper_matmul",
+        "n": n,
+        "strategy": strategy,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "compile_seconds": round(time.time() - t0, 1),
+        "roofline": terms,
+        "flops_per_device": costs.dot_flops,
+        "useful_fraction": ideal / costs.dot_flops if costs.dot_flops else None,
+        "collectives_by_kind": costs.collective_by_kind,
+        "collective_bytes": costs.collective_bytes,
+        "hbm_bytes": costs.hbm_bytes,
+        "memory": {
+            "argument_size_in_bytes": int(ma.argument_size_in_bytes),
+            "temp_size_in_bytes": int(ma.temp_size_in_bytes),
+        },
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"matmul__n{n}__{strategy}__{mesh_kind}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16384)
+    ap.add_argument(
+        "--strategies", nargs="+",
+        default=["naive", "bfs_d1", "bfs_d2", "bfs_d3", "2d_d1", "2d_d2"],
+    )
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    args = ap.parse_args()
+    base = None
+    for s in args.strategies:
+        r = run_cell(args.n, s, args.mesh)
+        t = r["roofline"]
+        if s == "naive":
+            base = t
+        rel = f"  bound vs naive {t['bound_s']/base['bound_s']:.3f}x" if base else ""
+        print(
+            f"{s:8s} compute {t['compute_s']:.3e}  memory {t['memory_s']:.3e}  "
+            f"collective {t['collective_s']:.3e} -> {t['bottleneck']}{rel}  "
+            f"(useful {r['useful_fraction']:.2f})"
+        )
+
+
+if __name__ == "__main__":
+    main()

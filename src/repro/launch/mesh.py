@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16x16 per pod; 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_for(n_devices: int, model_parallel: int = 16):
+    """Elastic variant: fit (data, model) to an arbitrary device count."""
+    from repro.runtime.elastic import plan_mesh
+
+    shape, axes = plan_mesh(n_devices, model_parallel=model_parallel)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,191 @@
+"""Shape/sharding specs for every (arch x shape) dry-run cell.
+
+Builds ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+allocation) for train/prefill/decode step arguments, plus NamedSharding
+trees derived from per-leaf LOGICAL axes. Logical assignment is by
+parameter path (regex tail-match), so the same table covers raw params,
+optimizer moments (same tails under m/ v/), and scan-stacked group params
+(leading layer dim detected via 'groups/').
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, Shape, get_config
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import DEFAULT_RULES, ShardingRules
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import TrainState, init_train_state
+
+__all__ = [
+    "param_logical_axes",
+    "cache_logical_axes",
+    "batch_logical_axes",
+    "sharding_tree",
+    "train_cell_specs",
+    "serve_cell_specs",
+    "path_of",
+]
+
+# (regex matched with .search against the path, logical axes for the BASE
+# (unstacked) shape). Order matters: first hit wins.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/unembedding$", ("fsdp", "vocab")),
+    (r"embed/embedding$", ("vocab", "fsdp")),
+    (r"w(q|k|v)/w$", ("fsdp", "heads")),
+    (r"w(q|k|v)/b$", ("heads",)),
+    (r"wo/w$", ("heads", "fsdp")),  # attention out OR mlstm output gate (D, dv)
+    (r"wo/b$", ("heads",)),
+    (r"(wi|wf)/w$", ("fsdp", None)),
+    (r"(wi|wf)/b$", (None,)),
+    (r"(up|gate|in_gate|in_rec|wa|wx)/w$", ("fsdp", "d_ff")),
+    (r"(up|gate|in_gate|in_rec|wa|wx)/b$", ("d_ff",)),
+    (r"down/w$", ("d_ff", "fsdp")),
+    (r"down/b$", (None,)),
+    (r"out/w$", ("d_ff", "fsdp")),  # mlstm/slstm/rglru output proj (wide, D)
+    (r"out/b$", (None,)),
+    (r"router/w$", (None, "experts")),
+    (r"w_(gate|up)$", ("experts", "fsdp", "d_ff")),
+    (r"w_down$", ("experts", "d_ff", "fsdp")),
+    (r"mixer/w/w$", ("fsdp", None, None, "state")),  # slstm input proj
+    (r"mixer/w/b$", (None, None, "state")),
+    (r"mixer/r$", (None, None, "state", None)),  # slstm recurrent (4,H,dh,dh)
+    (r"conv_w$", (None, "d_ff")),
+    (r"conv_b$", ("d_ff",)),
+    (r"lam$", ("d_ff",)),
+    (r"(scale|bias)$", None),  # norms: replicate (None * ndim)
+)
+
+_CACHE_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(^|/)pos$", ()),
+    (r"/(k|v)$", ("batch", "kv_heads", "cache_seq", None)),
+    (r"/C$", ("batch", None, "state", None)),  # mlstm matrix memory (B,H,dk,dv)
+    (r"/n$", ("batch", None, "state")),
+    (r"/m$", ("batch", None)),
+    (r"/c$", ("batch", None, "state")),  # slstm
+    (r"/h$", None),  # slstm (B,H,dh) / rglru (B,W): resolved by ndim below
+    (r"/conv$", ("batch", None, "state")),
+)
+
+
+def path_of(key_path) -> str:
+    parts = []
+    for p in key_path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(parts)
+
+
+def _match(rules, path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    ndim = len(shape)
+    base_ndim = ndim - 1 if "groups/" in path else ndim  # scan-stacked leaf?
+    for pattern, axes in rules:
+        if re.search(pattern, path):
+            if axes is None:
+                if pattern == r"/h$":  # slstm (B,H,dh) vs rglru (B,W)
+                    axes = ("batch", None, "state") if base_ndim == 3 else ("batch", "state")
+                else:
+                    return (None,) * ndim
+            if len(axes) < ndim:  # leading layer-group dims replicate
+                return (None,) * (ndim - len(axes)) + tuple(axes)
+            assert len(axes) == ndim, (path, shape, axes)
+            return tuple(axes)
+    return (None,) * ndim
+
+
+def param_logical_axes(path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    return _match(_PARAM_RULES, path, shape)
+
+
+def cache_logical_axes(path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    return _match(_CACHE_RULES, path, shape)
+
+
+def batch_logical_axes(name: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    return ("batch",) + (None,) * (len(shape) - 1)
+
+
+def sharding_tree(
+    shapes_tree,
+    mesh: Mesh,
+    logical_fn,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """Map a pytree of ShapeDtypeStructs -> NamedSharding tree."""
+
+    def one(key_path, leaf):
+        path = path_of(key_path)
+        axes = logical_fn(path, tuple(leaf.shape))
+        return NamedSharding(mesh, rules.spec(mesh, axes, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+# ------------------------------------------------------------------ cells
+
+
+def _batch_specs(cfg: ModelConfig, shape: Shape, *, with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.frontend == "audio_stub":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.mrope:
+        specs["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return specs
+
+
+def train_cell_specs(
+    cfg: ModelConfig,
+    shape: Shape,
+    mesh: Mesh,
+    opt_cfg: AdamWConfig,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """(state_shapes, batch_shapes, state_shardings, batch_shardings)."""
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        lambda k: init_train_state(cfg, opt_cfg, k), key
+    )
+    batch_shapes = _batch_specs(cfg, shape, with_labels=True)
+    state_sh = sharding_tree(state_shapes, mesh, param_logical_axes, rules)
+    batch_sh = sharding_tree(
+        batch_shapes, mesh, lambda p, s: batch_logical_axes(p, s), rules
+    )
+    return state_shapes, batch_shapes, state_sh, batch_sh
+
+
+def serve_cell_specs(
+    cfg: ModelConfig,
+    shape: Shape,
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+):
+    """Specs for prefill (full seq) or decode (1 token + cache of seq_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: M.init_params(cfg, k), key)
+    cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    params_sh = sharding_tree(params_shapes, mesh, param_logical_axes, rules)
+    cache_sh = sharding_tree(cache_shapes, mesh, cache_logical_axes, rules)
+
+    if shape.kind == "prefill":
+        batch_shapes = _batch_specs(cfg, shape, with_labels=False)
+    else:  # decode: one new token
+        # decode against an encoder context needs no frames (cross-KV cached)
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        if cfg.mrope:
+            batch_shapes["positions"] = jax.ShapeDtypeStruct((b, 1, 3), jnp.int32)
+    batch_sh = sharding_tree(
+        batch_shapes, mesh, lambda p, s2: batch_logical_axes(p, s2), rules
+    )
+    return params_shapes, cache_shapes, batch_shapes, params_sh, cache_sh, batch_sh

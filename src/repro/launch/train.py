@@ -1,0 +1,178 @@
+"""Training launcher: config -> mesh -> data -> jitted step -> ckpt loop.
+
+Real-cluster posture on any device count:
+  * fits the canonical mesh to the available devices (elastic),
+  * shards params/opt-state/batch via the same logical rules as the
+    dry-run (launch/specs.py),
+  * auto-resumes from the newest complete checkpoint,
+  * straggler watchdog triggers checkpoint+restart recommendation.
+
+CPU-scale usage (see examples/train_e2e.py for the packaged version):
+  PYTHONPATH=src python -m repro.launch.train --arch phi4_mini_3_8b \
+      --smoke --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.backend import MatmulBackend
+from repro.data.pipeline import DataConfig, SyntheticLM, shard_for_host
+from repro.launch.mesh import make_mesh_for
+from repro.launch.specs import (
+    batch_logical_axes,
+    param_logical_axes,
+    sharding_tree,
+)
+from repro.models.sharding import DEFAULT_RULES, use_sharding
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.elastic import StragglerMonitor
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def build(cfg, opt_cfg, *, batch, seq, accum, mesh=None, rules=DEFAULT_RULES, seed=0):
+    """Returns (state, pipeline, jitted_step). mesh=None -> single device."""
+    data = SyntheticLM(cfg, DataConfig(batch=batch, seq_len=seq, seed=seed))
+    step = make_train_step(cfg, opt_cfg, accum_steps=accum)
+
+    if mesh is None:
+        state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(seed))
+        return state, data, jax.jit(step, donate_argnums=(0,))
+
+    with use_sharding(mesh, rules):
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(cfg, opt_cfg, k), jax.random.PRNGKey(seed)
+        )
+        state_sh = sharding_tree(state_shapes, mesh, param_logical_axes, rules)
+        init_fn = jax.jit(
+            lambda k: init_train_state(cfg, opt_cfg, k), out_shardings=state_sh
+        )
+        state = init_fn(jax.random.PRNGKey(seed))
+        sample = data(0)
+        batch_shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), sample
+        )
+        batch_sh = sharding_tree(
+            batch_shapes, mesh, lambda p, s: batch_logical_axes(p, s), rules
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+    return state, data, jitted
+
+
+def train_loop(
+    cfg,
+    opt_cfg,
+    *,
+    steps,
+    batch,
+    seq,
+    accum=1,
+    mesh=None,
+    ckpt_dir=None,
+    save_every=50,
+    log_every=10,
+    seed=0,
+):
+    state, data, jitted = build(
+        cfg, opt_cfg, batch=batch, seq=seq, accum=accum, mesh=mesh, seed=seed
+    )
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, save_every=save_every, keep_last=3)
+        resumed, state_r = mgr.restore_latest(state)
+        if resumed is not None:
+            state, start = state_r, resumed
+            print(f"[resume] from step {resumed}")
+
+    watchdog = StragglerMonitor()
+    history = []
+    with use_sharding(mesh, DEFAULT_RULES) if mesh is not None else _null():
+        for step_i in range(start, steps):
+            watchdog.start_step()
+            state, metrics = jitted(state, data(step_i))
+            jax.block_until_ready(metrics["loss"])
+            flagged = watchdog.end_step()
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if step_i % log_every == 0 or step_i == steps - 1:
+                print(
+                    f"step {step_i:5d} loss {loss:.4f} "
+                    f"gnorm {float(metrics.get('grad_norm', 0.0)):.3f} "
+                    f"lr {float(metrics.get('lr', 0.0)):.2e} "
+                    f"({watchdog.median_step_time*1e3:.0f} ms/step)",
+                    flush=True,
+                )
+            if mgr:
+                mgr.maybe_save(state, step_i + 1, extra={"loss": loss})
+            if flagged:
+                print("[straggler] sustained slowdown — checkpoint + restart advised")
+                if mgr:
+                    mgr.maybe_save(state, step_i + 1, extra={"straggler": True})
+    return state, history
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null():
+    yield
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mesh", action="store_true", help="build a device mesh")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--backend", choices=["naive", "strassen", "winograd", "strassen_fused"], default="naive")
+    ap.add_argument("--strassen-depth", type=int, default=1)
+    ap.add_argument("--strassen-min-dim", type=int, default=1024)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.backend != "naive":
+        cfg = dataclasses.replace(
+            cfg,
+            matmul_backend=MatmulBackend(
+                kind=args.backend, depth=args.strassen_depth, min_dim=args.strassen_min_dim
+            ),
+        )
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5), total_steps=args.steps)
+    mesh = None
+    if args.mesh:
+        mesh = make_mesh_for(jax.device_count(), args.model_parallel)
+        print(f"mesh: {dict(mesh.shape)}")
+
+    per_host = shard_for_host(args.batch)
+    t0 = time.time()
+    _, history = train_loop(
+        cfg, opt_cfg,
+        steps=args.steps, batch=per_host, seq=args.seq, accum=args.accum,
+        mesh=mesh, ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+    )
+    dt = time.time() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s; loss {history[0]:.3f} -> {history[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+"""Attention blocks: GQA/MQA/MHA, full/causal/local, train + decode paths.
+
+Three execution paths, one semantics (cross-validated in tests):
+  * chunked_attention — double-chunked online-softmax in pure JAX:
+    differentiable, never materializes (Sq, Sk); the training/prefill path.
+    This is the XLA-level equivalent of kernels/flash_attention (the Pallas
+    kernel is the TPU-target fast path, validated in interpret mode).
+  * decode_attention — single-token query against a preallocated KV cache.
+  * kernels.flash_attention — opt-in Pallas path for serving.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, linear
+from repro.models.rope import apply_mrope, apply_rope
+from repro.models.sharding import constrain
+
+__all__ = [
+    "init_attention",
+    "attention_block",
+    "decode_attention",
+    "chunked_attention",
+    "init_kv_cache",
+]
+
+_NEG_INF = -1e30
+
+
+def _chunk(dim: int, preferred: int) -> int:
+    """Largest divisor of dim that is <= preferred."""
+    if dim <= preferred:
+        return dim
+    for c in range(preferred, 0, -1):
+        if dim % c == 0:
+            return c
+    return 1
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention, chunked over BOTH Sq and Sk.
+
+    q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d). Peak temp is
+    (B, Hq, q_chunk, k_chunk) fp32 — independent of sequence length.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    cq = _chunk(sq, q_chunk)
+    ck = _chunk(sk, k_chunk)
+    nq, nk = sq // cq, sk // ck
+
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # (nq, B, Hkv, g, cq, d) — q chunks as a scannable leading axis.
+    q_chunks = jnp.moveaxis(qg.reshape(b, hkv, g, nq, cq, d), 3, 0)
+    k_chunks = jnp.moveaxis(kf.reshape(b, hkv, nk, ck, d), 2, 0)
+    v_chunks = jnp.moveaxis(vf.reshape(b, hkv, nk, ck, d), 2, 0)
+
+    rows_base = jnp.arange(cq)
+    cols_base = jnp.arange(ck)
+
+    def one_q_chunk(args):
+        iq, q_blk = args  # q_blk: (B, Hkv, g, cq, d)
+        q_off = iq * cq
+
+        def kv_step(carry, xs):
+            acc, m, l = carry
+            ik, k_blk, v_blk = xs  # (B, Hkv, ck, d)
+            k_off = ik * ck
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk, k_blk)  # fp32
+            live = jnp.ones((cq, ck), dtype=bool)
+            rows = q_off + rows_base[:, None]
+            cols = k_off + cols_base[None, :]
+            if causal:
+                live &= rows >= cols
+            if window is not None:
+                live &= rows - cols < window
+            s = jnp.where(live, s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.where(live, jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, v_blk)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, cq, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, cq, 1), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq, 1), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nk), k_chunks, v_chunks)
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        return acc / l
+
+    # Remat each q-chunk: the backward pass recomputes its KV sweep instead
+    # of storing O(nq * nk) online-softmax residuals (this is what makes the
+    # 32k-token training/prefill cells fit in HBM).
+    out = jax.lax.map(
+        jax.checkpoint(one_q_chunk), (jnp.arange(nq), q_chunks)
+    )  # (nq, B, Hkv, g, cq, d)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq, d)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against a cache: q (B, Hq, 1, d), cache (B, Hkv, S, d).
+
+    Positions > pos (unwritten cache) and, with a window, <= pos - window
+    are masked.
+    """
+    b, hq, one, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d**-0.5
+    # Keep the cache in its storage dtype; accumulate in fp32 via
+    # preferred_element_type — upcasting the cache materializes a 2x-cache
+    # fp32 temp, the dominant decode HBM cost.
+    qg = (q.reshape(b, hkv, g, d).astype(jnp.float32) * scale).astype(k_cache.dtype)
+    scores = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    cols = jnp.arange(s)
+    live = cols[None, :] <= pos  # (1, S) broadcast over batch if pos scalar
+    if window is not None:
+        live = jnp.logical_and(live, cols[None, :] > pos - window)
+    scores = jnp.where(live[:, None, None, :], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ block
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    """Projection weights are stored FLAT (d_in, n*hd): the flattened head
+    dim is divisible by the 16-wide model axis for every assigned arch,
+    so jit input shardings stay even; heads are reshaped inside the block
+    (activation constraints tolerate uneven head counts)."""
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(keys[0], d, (h * hd,), dtype, bias=cfg.qkv_bias),
+        "wk": init_linear(keys[1], d, (hkv * hd,), dtype, bias=cfg.qkv_bias),
+        "wv": init_linear(keys[2], d, (hkv * hd,), dtype, bias=cfg.qkv_bias),
+        "wo": init_linear(keys[3], h * hd, (d,), dtype, scale=(h * hd) ** -0.5),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    cache_dtype = jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else dtype
+    shape = (batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cache_dtype), "v": jnp.zeros(shape, cache_dtype)}
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    backend = cfg.matmul_backend
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(params["wq"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, h, hd)
+    k = linear(params["wk"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, hkv, hd)
+    v = linear(params["wv"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, hkv, hd)
+    q = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)
+    k = jnp.moveaxis(k, 2, 1)
+    v = jnp.moveaxis(v, 2, 1)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", "seq", "head_dim")
+    k = constrain(k, "batch", "kv_heads", "seq", "head_dim")
+    v = constrain(v, "batch", "kv_heads", "seq", "head_dim")
+    return q, k, v
+
+
+def attention_block(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jax.Array] = None,
+    ring: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full attention sub-block (pre-norm residual handled by caller).
+
+    Train/prefill: cache None -> chunked flash over the whole sequence
+    (cache may be RETURNED for prefill when cache_pos is provided).
+    Decode: cache given and S == 1 -> cache update + decode_attention.
+    ring: sliding-window ring-buffer cache of size == window (token t lives
+    in slot t % W) — O(window) serving memory regardless of context length,
+    which is what makes recurrentgemma long_500k-serveable.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    new_cache = None
+    if cache is not None:
+        # cache storage dtype may be quantized (cfg.cache_dtype)
+        k = k.astype(cache["k"].dtype) if cache["k"].dtype != k.dtype else k
+        v = v.astype(cache["v"].dtype) if cache["v"].dtype != v.dtype else v
+    if cache is not None and s == 1:
+        if ring:
+            w_size = cache["k"].shape[2]
+            slot = cache_pos % w_size
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+            new_cache = {"k": kc, "v": vc}
+            # every resident token is in-window by construction; mask only
+            # the not-yet-written slots before the first wrap.
+            pos_eff = jnp.minimum(cache_pos, w_size - 1)
+            out = decode_attention(q, kc, vc, pos_eff, window=None)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+            new_cache = {"k": kc, "v": vc}
+            out = decode_attention(q, kc, vc, cache_pos, window=window)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        )
+        if cache is not None and ring:
+            w_size = cache["k"].shape[2]
+            if s >= w_size:
+                # keep only the last W tokens; token t -> slot t % W.
+                shift = (s - w_size) % w_size
+                kc = jnp.roll(k[:, :, -w_size:], shift, axis=2)
+                vc = jnp.roll(v[:, :, -w_size:], shift, axis=2)
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+                vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+            new_cache = {"k": kc, "v": vc}
+        elif cache is not None:
+            # prefill: write the whole K/V prefix.
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+            new_cache = {"k": kc, "v": vc}
+
+    out = jnp.moveaxis(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = linear(params["wo"], out, cfg.matmul_backend, w_logical=("heads", "fsdp"))
+    return constrain(out, "batch", "seq", "d_model"), new_cache
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> dict:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_block(
+    params,
+    x: jax.Array,
+    enc_kv: Tuple[jax.Array, jax.Array],
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V (whisper)."""
+    b, s, _ = x.shape
+    backend = cfg.matmul_backend
+    q = linear(params["wq"], x, backend).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = jnp.moveaxis(q, 1, 2)  # (B, H, S, hd)
+    k, v = enc_kv  # (B, Hkv, S_enc, hd)
+    out = chunked_attention(q, k, v, causal=False)
+    out = jnp.moveaxis(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return linear(params["wo"], out, backend)
+
+
+def encode_cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    backend = cfg.matmul_backend
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = linear(params["wk"], enc_out, backend).reshape(b, s, hkv, hd)
+    v = linear(params["wv"], enc_out, backend).reshape(b, s, hkv, hd)
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)

@@ -1,0 +1,47 @@
+"""Modality frontend STUBS (per assignment: backbone only).
+
+[audio] whisper-tiny: the real model has a 2-conv mel-spectrogram stem.
+Here ``input_specs()`` provides precomputed frame embeddings of shape
+(B, enc_seq, d_model) — :func:`audio_frames_spec` — and the encoder
+consumes them directly.
+
+[vlm] qwen2-vl-72b: the real model has a ViT with dynamic resolution.
+Here the backbone receives ordinary token ids plus precomputed M-RoPE
+position triplets (B, S, 3) — :func:`mrope_positions_spec`. For text-only
+inputs all three streams equal arange(S) and M-RoPE == RoPE (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "audio_frames_spec",
+    "mrope_positions_spec",
+    "make_stub_frames",
+    "make_stub_positions",
+]
+
+
+def audio_frames_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def mrope_positions_spec(batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq, 3), jnp.int32)
+
+
+def make_stub_frames(cfg: ModelConfig, batch: int, key=None) -> jax.Array:
+    """Deterministic pseudo-frames for smoke tests / examples."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(
+        key, (batch, cfg.enc_seq, cfg.d_model), jnp.float32
+    ).astype(jnp.dtype(cfg.dtype))
+
+
+def make_stub_positions(batch: int, seq: int, offset: int = 0) -> jax.Array:
+    """Text-only M-RoPE positions: all three streams identical."""
+    base = jnp.arange(seq, dtype=jnp.int32) + offset
+    return jnp.broadcast_to(base[None, :, None], (batch, seq, 3))

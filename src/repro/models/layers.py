@@ -1,0 +1,87 @@
+"""Primitive layers: linear (backend-routed), norms, embeddings.
+
+Every dense projection funnels through :func:`linear`, which routes the
+matmul to the configured backend — this is where the paper's Strassen
+engine plugs into the model stack.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import MatmulBackend, NAIVE_BACKEND, matmul as backend_matmul
+from repro.models.sharding import constrain
+
+__all__ = ["linear", "rmsnorm", "layernorm", "embed", "unembed", "init_linear"]
+
+
+def init_linear(key, d_in: int, shape_out, dtype, *, bias: bool = False, scale: Optional[float] = None):
+    """He-style init for a (d_in, *shape_out) projection stored 2D+."""
+    if isinstance(shape_out, int):
+        shape_out = (shape_out,)
+    fan_out = 1
+    for s in shape_out:
+        fan_out *= s
+    scale = scale if scale is not None else d_in**-0.5
+    w = jax.random.normal(key, (d_in, *shape_out), dtype=jnp.float32) * scale
+    params = {"w": w.astype(dtype)}
+    if bias:
+        params["b"] = jnp.zeros(shape_out, dtype=dtype)
+    return params
+
+
+def linear(
+    params,
+    x: jax.Array,
+    backend: MatmulBackend = NAIVE_BACKEND,
+    w_logical=None,
+) -> jax.Array:
+    """y = x @ w (+ b), with w (d_in, *out_dims) flattened for routing.
+
+    The backend decides per-shape whether this projection runs as a naive
+    XLA matmul or through the Strassen pipeline (paper integration point).
+    w_logical (in, out) logical dim names keep the Strassen levels pinned
+    to the layer's tensor-parallel layout.
+    """
+    w = params["w"]
+    d_in = w.shape[0]
+    out_dims = w.shape[1:]
+    w2 = w.reshape(d_in, -1)
+    y = backend_matmul(x, w2, backend, w_logical=w_logical)
+    y = y.reshape(*x.shape[:-1], *out_dims)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    """Token embedding lookup: (B, S) int -> (B, S, D)."""
+    out = jnp.take(params["embedding"], tokens, axis=0)
+    return constrain(out, "batch", "seq", "d_model")
+
+
+def unembed(params, x: jax.Array, *, tied: bool = False, softcap: float = 0.0) -> jax.Array:
+    """(B, S, D) -> (B, S, V) logits."""
+    w = params["embedding"].T if tied else params["unembedding"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return constrain(logits, "batch", "seq", "vocab")

@@ -1,0 +1,45 @@
+"""Dense MLP blocks: SwiGLU (llama/phi/qwen), GeGLU (gemma), plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, linear
+from repro.models.sharding import constrain
+
+__all__ = ["init_mlp", "mlp_block"]
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    params = {
+        "up": init_linear(keys[0], d, (f,), dtype),
+        "down": init_linear(keys[1], f, (d,), dtype, scale=f**-0.5),
+    }
+    if cfg.glu:
+        params["gate"] = init_linear(keys[2], d, (f,), dtype)
+    return params
+
+
+def mlp_block(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    backend = cfg.matmul_backend
+    act = _ACTS[cfg.act]
+    up = linear(params["up"], x, backend, w_logical=("fsdp", "d_ff"))
+    up = constrain(up, "batch", "seq", "d_ff")
+    if "gate" in params:
+        gate = linear(params["gate"], x, backend, w_logical=("fsdp", "d_ff"))
+        gate = constrain(gate, "batch", "seq", "d_ff")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    out = linear(params["down"], h, backend, w_logical=("d_ff", "fsdp"))
+    return constrain(out, "batch", "seq", "d_model")

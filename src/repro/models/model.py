@@ -1,0 +1,112 @@
+"""Unified model API over decoder-only and encoder-decoder stacks.
+
+Everything downstream (training/ serving/ launch/ benchmarks) talks to
+these five functions; the family dispatch lives here and nowhere else.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "init_params",
+    "init_cache",
+    "apply_train",
+    "apply_prefill",
+    "apply_decode",
+    "loss_fn",
+]
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.is_encdec:
+        return encdec.init_encdec_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    if cfg.is_encdec:
+        return encdec.init_encdec_cache(cfg, batch, max_seq, dtype)
+    return transformer.init_cache(cfg, batch, max_seq, dtype)
+
+
+def apply_train(
+    params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced logits. batch: tokens (B,S) [+ frames / positions]."""
+    if cfg.is_encdec:
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits, _, aux = encdec.decode_forward(
+            params, batch["tokens"], cfg, enc_out=enc_out
+        )
+        return logits, aux
+    logits, _, aux = transformer.forward(
+        params, batch["tokens"], cfg, positions=batch.get("positions")
+    )
+    return logits, aux
+
+
+def apply_prefill(
+    params,
+    batch: Dict[str, jax.Array],
+    cache: dict,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict]:
+    """Fill the cache with a prompt; return last-position logits + cache."""
+    if cfg.is_encdec:
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits, new_cache, _ = encdec.decode_forward(
+            params, batch["tokens"], cfg, enc_out=enc_out, cache=cache
+        )
+        return logits[:, -1], new_cache
+    logits, new_cache, _ = transformer.forward(
+        params, batch["tokens"], cfg,
+        positions=batch.get("positions"), cache=cache,
+    )
+    return logits[:, -1], new_cache
+
+
+def apply_decode(
+    params,
+    tokens: jax.Array,  # (B, 1)
+    cache: dict,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, dict]:
+    """One decode step against the cache; returns (B, V) logits."""
+    if cfg.is_encdec:
+        logits, new_cache, _ = encdec.decode_forward(
+            params, tokens, cfg, enc_out=None, cache=cache
+        )
+        return logits[:, -1], new_cache
+    logits, new_cache, _ = transformer.forward(
+        params, tokens, cfg, positions=positions, cache=cache
+    )
+    return logits[:, -1], new_cache
+
+
+def loss_fn(
+    params, batch: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ router aux), fp32 logits math."""
+    logits, aux = apply_train(params, batch, cfg)
+    targets = batch["labels"]
+    mask = batch.get("mask")
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll * mask) / denom
+    else:
+        ce = jnp.mean(nll)
+    loss = ce + aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux, "ppl": jnp.exp(ce)}
+    return loss, metrics

@@ -1,0 +1,119 @@
+"""Griffin-style recurrent block: causal conv + RG-LRU (recurrentgemma).
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)                     recurrence gate
+    i_t = sigmoid(W_x x_t)                     input gate
+    log a_t = -c * r_t * softplus(Lambda)      per-channel learnable decay
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is a first-order linear scan with input-dependent decay —
+parallelized over S with jax.lax.associative_scan (train/prefill) and O(1)
+state for decode. This is why recurrentgemma-9b is long_500k-eligible: its
+"cache" is (conv tail, h state) per block plus a 2048-token local-attention
+window, independent of total context length.
+
+Strassen applicability: the gated scan has no matmul — the paper's
+technique applies only to this block's in/out projections (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, linear
+from repro.models.sharding import constrain
+
+__all__ = ["init_rglru", "rglru_block", "init_rglru_state"]
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    keys = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (paper's stable range).
+    lam = jax.random.uniform(keys[0], (w,), minval=2.0, maxval=6.0)
+    return {
+        "in_gate": init_linear(keys[1], d, (w,), dtype),  # gelu branch
+        "in_rec": init_linear(keys[2], d, (w,), dtype),  # recurrent branch
+        "conv_w": (jax.random.normal(keys[3], (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": init_linear(keys[4], w, (w,), jnp.float32, bias=True),
+        "wx": init_linear(keys[5], w, (w,), jnp.float32, bias=True),
+        "lam": lam.astype(jnp.float32),
+        "out": init_linear(keys[6], w, (d,), dtype, scale=w**-0.5),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.rnn_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, conv_b: jax.Array, tail: Optional[jax.Array]):
+    """Depthwise causal conv via shifted adds. x: (B, S, W); tail: (B, cw-1, W)."""
+    cw = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    padded = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, S+cw-1, W)
+    s = x.shape[1]
+    out = None
+    for j in range(cw):
+        term = padded[:, j : j + s, :] * conv_w[cw - 1 - j].astype(x.dtype)
+        out = term if out is None else out + term
+    new_tail = padded[:, -(cw - 1) :, :] if cw > 1 else tail
+    return out + conv_b.astype(x.dtype), new_tail
+
+
+def _rglru_scan(xr: jax.Array, params, cfg: ModelConfig, h0: Optional[jax.Array]):
+    """xr: (B, S, W) conv output -> (B, S, W) recurrence output, final h."""
+    r = jax.nn.sigmoid(linear(params["wa"], xr.astype(jnp.float32)))
+    i = jax.nn.sigmoid(linear(params["wx"], xr.astype(jnp.float32)))
+    log_a = -cfg.rglru_c * r * jax.nn.softplus(params["lam"])  # (B, S, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xr.astype(jnp.float32)
+    )
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0 contribution
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0)
+    # associative first-order recurrence h_t = a_t h_{t-1} + b_t
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_block(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Griffin recurrent block: gelu gate branch x (conv -> RG-LRU) branch."""
+    b, s, d = x.shape
+    backend = cfg.matmul_backend
+    gate = jax.nn.gelu(linear(params["in_gate"], x, backend), approximate=True)
+    rec_in = linear(params["in_rec"], x, backend)
+    rec_in = constrain(rec_in, "batch", "seq", "d_ff")
+
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = _causal_conv(rec_in, params["conv_w"], params["conv_b"], tail)
+    h0 = state["h"] if state is not None else None
+    h, h_last = _rglru_scan(conv_out, params, cfg, h0)
+
+    merged = gate * h.astype(x.dtype)
+    out = linear(params["out"], merged, backend)
+    out = constrain(out, "batch", "seq", "d_model")
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last, "conv": new_tail.astype(jnp.float32)}
+    return out, new_state

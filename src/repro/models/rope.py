@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl style M-RoPE.
+
+M-RoPE (multimodal RoPE) splits each head's rotary dims into three
+sections (temporal / height / width), each rotated by its own position
+stream. The vision frontend is a stub here (the assignment specifies the
+backbone only), so positions arrive precomputed as (B, S, 3); for pure
+text all three streams are equal and M-RoPE reduces exactly to RoPE —
+asserted in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope", "apply_mrope"]
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies (head_dim/2,) in fp32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., :half], x[..., half:]) by angles (..., half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """x: (B, H, S, d); positions: (B, S) int."""
+    inv = rope_frequencies(x.shape[-1], theta)  # (half,)
+    angles = positions.astype(jnp.float32)[:, None, :, None] * inv  # (B, 1, S, half)
+    return _rotate(x.astype(jnp.float32), angles).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """M-RoPE: x (B, H, S, d); positions (B, S, 3) [t, h, w] streams.
+
+    sections partition the half-dim: sum(sections) == d // 2. Each section's
+    frequency band uses its own position stream — the qwen2-vl layout where
+    the bands are interleaved by section over the ORIGINAL frequency order.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_frequencies(x.shape[-1], theta)  # (half,)
+    pos = positions.astype(jnp.float32)  # (B, S, 3)
+    # Build per-frequency position selection: frequency slot j belongs to
+    # section s(j); use stream s(j)'s positions.
+    stream_idx = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )  # (half,)
+    pos_per_freq = jnp.take_along_axis(
+        pos[:, :, :], stream_idx[None, None, :], axis=2
+    )  # (B, S, half)
+    angles = pos_per_freq[:, None, :, :] * inv  # (B, 1, S, half)
+    return _rotate(x.astype(jnp.float32), angles).astype(x.dtype)

@@ -1,0 +1,158 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code never names mesh axes directly; it tags tensor dims with logical
+names ("batch", "heads", "d_ff", ...). A :class:`ShardingRules` maps each
+logical name to a tuple of mesh axes. Because the production mesh shape is
+fixed (16x16 and 2x16x16) while arch head counts vary (1..64 kv heads),
+:meth:`ShardingRules.spec` drops any mapping whose dim is not divisible by
+the mesh-axis product — jit in_shardings reject uneven dims, and uneven
+activation shardings waste pad compute. The fallback is recorded so the
+roofline notes can attribute replication cost.
+
+The active mesh+rules are held in a contextvar set by the launcher
+(:func:`use_sharding`); :func:`constrain` is a no-op outside that context,
+so single-device smoke tests run the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "use_sharding",
+    "constrain",
+    "current_mesh",
+    "make_named_sharding",
+]
+
+Axes = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Map logical dim names -> mesh axis tuples.
+
+    Defaults implement DP over (pod, data), TP over model:
+      batch    -> (pod, data)   data parallel / FSDP batch axis
+      fsdp     -> (data,)       parameter dim sharded ZeRO-style
+      heads    -> (model,)      attention-head tensor parallelism
+      kv_heads -> (model,)      falls back when kv heads % 16 != 0
+      d_ff     -> (model,)      MLP tensor parallelism
+      vocab    -> (model,)      embedding/logits TP
+      experts  -> (model,)      expert parallelism for MoE
+      seq      -> ()            sequence kept local by default
+      seq_sp   -> (pod, data)   sequence parallelism for batch=1 cells
+    """
+
+    rules: Dict[str, Axes] = dataclasses.field(
+        default_factory=lambda: {
+            "batch": ("pod", "data"),
+            "fsdp": ("data",),
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "d_ff": ("model",),
+            "vocab": ("model",),
+            "experts": ("model",),
+            "d_model": (),
+            "head_dim": (),
+            "seq": (),
+            "seq_sp": ("pod", "data"),
+            "cache_seq": ("model",),  # KV-cache fallback when kv_heads won't divide
+            "ep_flat": ("pod", "data", "model"),  # flattened (group, expert) dim
+            "layers": (),
+            "state": ("model",),
+        }
+    )
+
+    def axes_for(
+        self, mesh: Mesh, logical: Optional[str], dim: int, *, allow_uneven: bool = False
+    ) -> Optional[Axes]:
+        """Mesh axes for one logical dim, or None when not shardable.
+
+        allow_uneven: jit INPUT shardings must divide evenly, but internal
+        with_sharding_constraint tolerates GSPMD padding — activations pass
+        True so e.g. 24 heads shard over 16 (25% pad beats 16x replication).
+        """
+        if logical is None:
+            return None
+        axes = tuple(a for a in self.rules.get(logical, ()) if a in mesh.shape)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size != 0:
+            if not (allow_uneven and dim > size // 2):
+                return None  # replicate instead of (heavy) padding
+        return axes
+
+    def spec(
+        self,
+        mesh: Mesh,
+        logical_axes: Sequence[Optional[str]],
+        shape: Sequence[int],
+        *,
+        allow_uneven: bool = False,
+    ) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        parts = []
+        used: set = set()
+        for name, dim in zip(logical_axes, shape):
+            axes = self.axes_for(mesh, name, dim, allow_uneven=allow_uneven)
+            if axes is None or any(a in used for a in axes):
+                parts.append(None)
+            else:
+                used.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+
+DEFAULT_RULES = ShardingRules()
+
+_CTX: contextvars.ContextVar[Optional[Tuple[Mesh, ShardingRules]]] = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+    """Activate mesh+rules for all constrain() calls in model code."""
+    token = _CTX.set((mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity with no context.
+
+    Activations allow uneven (padded) shardings — inputs use spec() with
+    allow_uneven=False via make_named_sharding.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.spec(mesh, logical_axes, x.shape, allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def make_named_sharding(
+    mesh: Mesh, logical_axes: Sequence[Optional[str]], shape: Sequence[int],
+    rules: ShardingRules = DEFAULT_RULES,
+) -> NamedSharding:
+    """NamedSharding for jit in_shardings/out_shardings (divisible only)."""
+    return NamedSharding(mesh, rules.spec(mesh, logical_axes, shape))

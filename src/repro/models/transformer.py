@@ -1,0 +1,333 @@
+"""Decoder-LM assembly: pattern-cycled blocks, scan-over-groups, caches.
+
+Layers are grouped by the config's block_pattern period P: consecutive
+groups of P layers share a stacked parameter pytree and run under ONE
+jax.lax.scan (compact HLO — essential to keep the 40-cell dry-run
+compile times sane), with any remainder layers unrolled at the end.
+Per-group remat (jax.checkpoint) implements activation checkpointing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_block,
+    init_attention,
+    init_kv_cache,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import embed, init_linear, layernorm, rmsnorm, unembed
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.moe import init_moe, moe_block
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_block
+from repro.models.sharding import constrain
+from repro.models.xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_block,
+    slstm_block,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "Mode",
+]
+
+Mode = str  # "train" | "prefill" | "decode"
+
+
+def _norm(cfg: ModelConfig, params, x):
+    if cfg.norm == "layernorm":
+        return layernorm(params, x, cfg.norm_eps)
+    return rmsnorm(params, x, cfg.norm_eps)
+
+
+def _init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    if cfg.is_moe:
+        return True
+    return cfg.d_ff > 0
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    kmix, kffn = jax.random.split(key)
+    params: Dict[str, Any] = {"ln1": _init_norm(cfg, dtype)}
+    if kind in ("attn", "local_attn"):
+        params["mixer"] = init_attention(kmix, cfg, dtype)
+    elif kind == "mlstm":
+        params["mixer"] = init_mlstm(kmix, cfg, dtype)
+    elif kind == "slstm":
+        params["mixer"] = init_slstm(kmix, cfg, dtype)
+    elif kind == "rglru":
+        params["mixer"] = init_rglru(kmix, cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if _has_ffn(cfg, kind):
+        params["ln2"] = _init_norm(cfg, dtype)
+        params["ffn"] = init_moe(kffn, cfg, dtype) if cfg.is_moe else init_mlp(kffn, cfg, dtype)
+    return params
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype):
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, max_seq, dtype)
+    if kind == "local_attn":
+        # ring buffer: O(window) regardless of context length
+        window_seq = min(max_seq, cfg.local_window) if cfg.local_window else max_seq
+        return init_kv_cache(cfg, batch, window_seq, dtype)
+    if kind == "mlstm":
+        return init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return init_slstm_state(cfg, batch)
+    if kind == "rglru":
+        return init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _apply_layer(
+    lparams,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions,
+    cache_entry,
+    cache_pos,
+    causal: bool,
+):
+    """One block: pre-norm mixer + residual (+ pre-norm FFN + residual)."""
+    h = _norm(cfg, lparams["ln1"], x)
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" and cfg.local_window else None
+        ring = kind == "local_attn" and bool(cfg.local_window)
+        mix, new_cache = attention_block(
+            lparams["mixer"], h, cfg,
+            positions=positions, causal=causal, window=window,
+            cache=cache_entry, cache_pos=cache_pos, ring=ring,
+        )
+    elif kind == "mlstm":
+        mix, new_cache = mlstm_block(lparams["mixer"], h, cfg, state=cache_entry)
+    elif kind == "slstm":
+        mix, new_cache = slstm_block(lparams["mixer"], h, cfg, state=cache_entry)
+    elif kind == "rglru":
+        mix, new_cache = rglru_block(lparams["mixer"], h, cfg, state=cache_entry)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in lparams:
+        h2 = _norm(cfg, lparams["ln2"], x)
+        if cfg.is_moe:
+            f, aux = moe_block(lparams["ffn"], h2, cfg)
+        else:
+            f = mlp_block(lparams["ffn"], h2, cfg)
+        x = x + f
+    return constrain(x, "batch", "seq", "d_model"), new_cache, aux
+
+
+# ------------------------------------------------------------------ init
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Full decoder-LM parameter pytree with scan-stacked layer groups."""
+    dtype = jnp.dtype(cfg.dtype)
+    pattern = cfg.block_pattern
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+
+    k_embed, k_layers, k_tail, k_out = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": {
+            "embedding": (
+                jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * cfg.d_model**-0.5
+            ).astype(dtype)
+        },
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["embed"]["unembedding"] = (
+            jax.random.normal(k_out, (cfg.d_model, cfg.vocab)) * cfg.d_model**-0.5
+        ).astype(dtype)
+
+    # groups: dict pos{j} -> params stacked over n_groups
+    if n_groups:
+        group_keys = jax.random.split(k_layers, n_groups * period).reshape(
+            n_groups, period, 2
+        )
+        groups = {}
+        for j in range(period):
+            per_group = [
+                _init_layer(group_keys[g, j], cfg, pattern[j], dtype)
+                for g in range(n_groups)
+            ]
+            groups[f"pos{j}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+        params["groups"] = groups
+    if n_tail:
+        tail_keys = jax.random.split(k_tail, n_tail)
+        params["tail"] = [
+            _init_layer(tail_keys[i], cfg, pattern[i % period], dtype)
+            for i in range(n_tail)
+        ]
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> dict:
+    """Serving cache pytree matching the grouped layer layout."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pattern = cfg.block_pattern
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if n_groups:
+        cache["groups"] = {
+            f"pos{j}": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[
+                    _init_layer_cache(cfg, pattern[j], batch, max_seq, dtype)
+                    for _ in range(n_groups)
+                ],
+            )
+            for j in range(period)
+        }
+    if n_tail:
+        cache["tail"] = [
+            _init_layer_cache(cfg, pattern[i % period], batch, max_seq, dtype)
+            for i in range(n_tail)
+        ]
+    return cache
+
+
+# ------------------------------------------------------------------ forward
+
+
+def forward(
+    params,
+    tokens_or_embeds: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Run the decoder stack.
+
+    Args:
+      tokens_or_embeds: (B, S) int tokens, or (B, S, D) precomputed embeds
+        (modality frontends are stubs that hand embeddings directly).
+      positions: (B, S) or (B, S, 3) for mrope; defaults to arange (train)
+        or cache.pos offset (decode/prefill).
+      cache: serving cache -> decode/prefill mode; None -> train mode.
+
+    Returns:
+      (logits (B, S, V), new_cache or None, aux_loss scalar)
+    """
+    pattern = cfg.block_pattern
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+
+    if tokens_or_embeds.ndim == 2:
+        x = embed(params["embed"], tokens_or_embeds)
+    else:
+        x = tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+    b, s = x.shape[0], x.shape[1]
+
+    cache_pos = cache["pos"] if cache is not None else None
+    if positions is None:
+        base = jnp.arange(s)[None, :] + (cache_pos if cache_pos is not None else 0)
+        positions = jnp.broadcast_to(base, (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = {"pos": (cache_pos + s)} if cache is not None else None
+
+    # --- scanned groups
+    if n_groups:
+        gparams = params["groups"]
+        gcache = cache["groups"] if cache is not None else None
+
+        def body(x_carry, xs):
+            gp, gc = xs
+
+            def inner(x_in):
+                aux = jnp.zeros((), jnp.float32)
+                ncs = {}
+                x_cur = x_in
+                for j in range(period):
+                    x_cur, nc, a = _apply_layer(
+                        gp[f"pos{j}"], x_cur, cfg, pattern[j],
+                        positions=positions,
+                        cache_entry=(gc[f"pos{j}"] if gc is not None else None),
+                        cache_pos=cache_pos,
+                        causal=causal,
+                    )
+                    aux = aux + a
+                    if nc is not None:
+                        ncs[f"pos{j}"] = nc
+                return x_cur, ncs, aux
+
+            fn = jax.checkpoint(inner) if (cfg.remat and cache is None) else inner
+            x_out, ncs, aux = fn(x_carry)
+            return x_out, (ncs, aux)
+
+        xs = (gparams, gcache) if gcache is not None else (gparams, None)
+        if gcache is None:
+            # replace None with a dummy zero-leaf pytree scan can carry
+            xs = (gparams, jnp.zeros((n_groups,), jnp.int8))
+
+            def body_nocache(x_carry, xs2):
+                gp, _ = xs2
+                return body(x_carry, (gp, None))
+
+            x, (ncs, auxes) = jax.lax.scan(body_nocache, x, xs)
+        else:
+            x, (ncs, auxes) = jax.lax.scan(body, x, xs)
+        aux_total = aux_total + jnp.sum(auxes)
+        if cache is not None:
+            new_cache["groups"] = ncs
+
+    # --- unrolled tail layers (remat per layer in train mode, like groups)
+    if "tail" in params:
+        new_tail = []
+        for i, lparams in enumerate(params["tail"]):
+            kind = pattern[i % period]
+            centry = cache["tail"][i] if cache is not None else None
+
+            def tail_layer(lp, x_in, ce):
+                return _apply_layer(
+                    lp, x_in, cfg, kind,
+                    positions=positions, cache_entry=ce,
+                    cache_pos=cache_pos, causal=causal,
+                )
+
+            fn = (
+                jax.checkpoint(tail_layer)
+                if (cfg.remat and cache is None)
+                else tail_layer
+            )
+            x, nc, a = fn(lparams, x, centry)
+            aux_total = aux_total + a
+            new_tail.append(nc)
+        if cache is not None:
+            new_cache["tail"] = new_tail
+
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(
+        params["embed"], x, tied=cfg.tie_embeddings, softcap=cfg.logit_softcap
+    )
+    return logits, new_cache, aux_total

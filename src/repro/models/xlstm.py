@@ -1,0 +1,272 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Sequential stabilized recurrences after arXiv:2405.04517. The recurrence
+itself is not a matmul, so the paper's Strassen technique is inapplicable
+here (DESIGN.md §Arch-applicability); the q/k/v/out projections still
+route through the configured backend.
+
+Both blocks run as a lax.scan over time for training/prefill (compact HLO,
+state never materialized over S) and expose a single-step path for decode
+whose state pytree is the serving "KV cache" equivalent — O(1) in sequence
+length, which is why xlstm-1.3b is a long_500k-eligible architecture.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, linear
+from repro.models.sharding import constrain
+
+__all__ = [
+    "init_mlstm",
+    "mlstm_block",
+    "init_mlstm_state",
+    "init_slstm",
+    "slstm_block",
+    "init_slstm_state",
+]
+
+
+# ----------------------------------------------------------------- mLSTM
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qk, dv = cfg.mlstm_qk_dim, cfg.mlstm_v_dim
+    keys = jax.random.split(key, 7)
+    # Wide projections stored flat (divisible by the model axis); reshaped
+    # to (B, S, H, *) inside the block.
+    return {
+        "wq": init_linear(keys[0], d, (qk,), dtype),
+        "wk": init_linear(keys[1], d, (qk,), dtype),
+        "wv": init_linear(keys[2], d, (dv,), dtype),
+        "wi": init_linear(keys[3], d, (h,), jnp.float32, bias=True),
+        "wf": init_linear(keys[4], d, (h,), jnp.float32, bias=True),
+        "wo": init_linear(keys[5], d, (dv,), dtype),
+        "out": init_linear(keys[6], dv, (d,), dtype, scale=dv**-0.5),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    dk, dv = cfg.mlstm_qk_dim // h, cfg.mlstm_v_dim // h
+    return {
+        "C": jnp.zeros((batch, h, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_chunkwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,
+    f_pre: jax.Array,
+    state: dict,
+    chunk: int,
+) -> Tuple[dict, jax.Array]:
+    """Chunkwise-parallel mLSTM — exact (same stabilizers as the scan).
+
+    The sequential form writes the (dk x dv) matrix state EVERY timestep:
+    O(S * dk * dv) HBM traffic per head, which makes xlstm train_4k the
+    most memory-bound cell in the roofline table. The chunkwise form
+    (cf. the xLSTM paper's kernels) writes state once per chunk and turns
+    the intra-chunk work into (L x L) matmuls for the MXU:
+
+      B_t = cumsum(log f);  m_t = max(m_prev + b_t, b_t + cummax(li - b))
+      W_ij = exp(b_i - b_j + li_j - m_i)   (j <= i, the intra decay matrix)
+      h_i  = [e_i q_i C_prev + ((q K^T) o W) V] / max(|den_i|, exp(-m_i))
+
+    with e_i = exp(m_prev + b_i - m_i). The per-row stabilizer m_i equals
+    the sequential recurrence's m_t exactly (tests assert equivalence).
+
+    Shapes: q,k (B,H,S,dk); v (B,H,S,dv); i_pre,f_pre (B,H,S).
+    Returns (new_state, h (B,H,S,dv)).
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, L = s // chunk, chunk
+
+    # chunked views: (B, H, nc, L, *)
+    qc = q.reshape(b, h, nc, L, dk)
+    kc = k.reshape(b, h, nc, L, dk)
+    vc = v.reshape(b, h, nc, L, dv)
+    li = i_pre.reshape(b, h, nc, L)
+    lf = jax.nn.log_sigmoid(f_pre).reshape(b, h, nc, L)
+
+    bcum = jnp.cumsum(lf, axis=-1)  # (B,H,nc,L) local log-decay prefix
+    u = li - bcum
+    cummax_u = jax.lax.cummax(u, axis=3)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))  # j <= i
+
+    def chunk_step(carry, xs):
+        c_st, n_st, m_st = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qj, kj, vj, bj, lij, cmx = xs  # (B,H,L,*) for this chunk
+        m_rows = jnp.maximum(m_st[..., None] + bj, bj + cmx)  # (B,H,L)
+        e = jnp.exp(m_st[..., None] + bj - m_rows)  # inter coeff (B,H,L)
+        # intra decay matrix W_ij = exp(b_i - b_j + li_j - m_i), j<=i
+        logw = (
+            bj[..., :, None] - bj[..., None, :] + lij[..., None, :]
+            - m_rows[..., :, None]
+        )
+        w = jnp.where(tri, jnp.exp(logw), 0.0)  # (B,H,L,L)
+        scores = jnp.einsum("bhld,bhmd->bhlm", qj, kj) * w
+        num = (
+            e[..., None] * jnp.einsum("bhld,bhdv->bhlv", qj, c_st)
+            + jnp.einsum("bhlm,bhmv->bhlv", scores, vj)
+        )
+        den = (
+            e * jnp.einsum("bhld,bhd->bhl", qj, n_st)
+            + jnp.sum(scores, axis=-1)
+        )
+        h_out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # state update with the chunk-end stabilizer m_last
+        m_last = m_rows[..., -1]
+        b_last = bj[..., -1]
+        carry_decay = jnp.exp(m_st + b_last - m_last)  # (B,H)
+        src_w = jnp.exp(b_last[..., None] - bj + lij - m_last[..., None])  # (B,H,L)
+        c_new = (
+            carry_decay[..., None, None] * c_st
+            + jnp.einsum("bhl,bhld,bhlv->bhdv", src_w, kj, vj)
+        )
+        n_new = carry_decay[..., None] * n_st + jnp.einsum("bhl,bhld->bhd", src_w, kj)
+        return (c_new, n_new, m_last), h_out
+
+    xs = tuple(
+        jnp.moveaxis(t, 2, 0)
+        for t in (qc, kc, vc, bcum, li, cummax_u)
+    )
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]), xs
+    )
+    h_seq = jnp.moveaxis(hs, 0, 2).reshape(b, h, s, dv)
+    return {"C": c_f, "n": n_f, "m": m_f}, h_seq
+
+
+def _mlstm_step(state, inputs):
+    """One stabilized mLSTM step. inputs per t: q,k,v (B,H,*), i,f (B,H)."""
+    q, k, v, i_pre, f_pre = inputs
+    c_st, n_st, m_st = state["C"], state["n"], state["m"]
+    log_f = jax.nn.log_sigmoid(f_pre)  # (B, H)
+    m_new = jnp.maximum(log_f + m_st, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m_st - m_new)
+    c_new = f_g[..., None, None] * c_st + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_g[..., None] * n_st + i_g[..., None] * k
+    h_num = jnp.einsum("bhk,bhkv->bhv", q, c_new)
+    h_den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new))
+    h = h_num / jnp.maximum(h_den, 1.0)[..., None]
+    return {"C": c_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_block(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """(B, S, D) -> (B, S, D). state given -> recurrent continuation (decode)."""
+    b, s, d = x.shape
+    backend = cfg.matmul_backend
+    h = cfg.n_heads
+    dk = cfg.mlstm_qk_dim // h
+
+    dv_h = cfg.mlstm_v_dim // h
+    q = linear(params["wq"], x, backend).reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
+    k = linear(params["wk"], x, backend).reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
+    v = linear(params["wv"], x, backend).reshape(b, s, h, dv_h).astype(jnp.float32)
+    i_pre = linear(params["wi"], x.astype(jnp.float32))
+    f_pre = linear(params["wf"], x.astype(jnp.float32))
+    o_gate = jax.nn.sigmoid(
+        linear(params["wo"], x, backend).reshape(b, s, h, dv_h).astype(jnp.float32)
+    )
+
+    st = state if state is not None else init_mlstm_state(cfg, b)
+    if cfg.mlstm_chunk and s > 1 and s % cfg.mlstm_chunk == 0:
+        # chunkwise-parallel path (perf): heads-first layout
+        to_hf = lambda t: jnp.moveaxis(t, 2, 1)  # (B,S,H,*) -> (B,H,S,*)
+        new_state, h_hf = mlstm_chunkwise(
+            to_hf(q), to_hf(k), to_hf(v),
+            jnp.moveaxis(i_pre, 2, 1), jnp.moveaxis(f_pre, 2, 1),
+            st, cfg.mlstm_chunk,
+        )
+        hs = jnp.moveaxis(h_hf, 1, 2)  # (B,S,H,dv_h)
+    else:
+        # sequential scan over time: move S to the front of each stream.
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+        new_state, hs = jax.lax.scan(_mlstm_step, st, xs)  # (S, B, H, dv_h)
+        hs = jnp.moveaxis(hs, 0, 1)  # (B, S, H, dv_h)
+    hs = hs * o_gate
+    out = linear(params["out"], hs.reshape(b, s, cfg.mlstm_v_dim).astype(x.dtype), backend)
+    out = constrain(out, "batch", "seq", "d_model")
+    return out, (new_state if state is not None else None)
+
+
+# ----------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    keys = jax.random.split(key, 6)
+    r_scale = dh**-0.5
+    return {
+        # input projections for z/i/f/o stacked: (D, 4, H, dh)
+        "w": init_linear(keys[0], d, (4, h, dh), dtype, bias=True),
+        # per-head recurrent mixing: (4, H, dh, dh)
+        "r": (jax.random.normal(keys[1], (4, h, dh, dh)) * r_scale).astype(jnp.float32),
+        "out": init_linear(keys[2], d, (d,), dtype, scale=d**-0.5),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32), "h": z}
+
+
+def _slstm_step(r, state, wx_t):
+    """wx_t: (B, 4, H, dh) input pre-activations at step t."""
+    h_prev = state["h"]
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, r)  # (B, 4, H, dh)
+    pre = wx_t + rec
+    z = jnp.tanh(pre[:, 0])
+    i_pre = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_g * state["c"] + i_g * z
+    n_new = f_g * state["n"] + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+
+def slstm_block(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    wx = linear(params["w"], x.astype(jnp.float32))  # (B, S, 4, H, dh)
+    st = state if state is not None else init_slstm_state(cfg, b)
+    r = params["r"]
+    new_state, hs = jax.lax.scan(
+        lambda c, w_t: _slstm_step(r, c, w_t), st, jnp.moveaxis(wx, 1, 0)
+    )
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)  # (B, S, D)
+    out = linear(params["out"], hs.astype(x.dtype), cfg.matmul_backend)
+    out = constrain(out, "batch", "seq", "d_model")
+    return out, (new_state if state is not None else None)

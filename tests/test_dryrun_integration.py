@@ -1,0 +1,61 @@
+"""End-to-end dry-run integration: one real cell on the production mesh.
+
+Runs in a subprocess (device count locks at jax init) with 512 placeholder
+devices — exactly what repro.launch.dryrun does — and asserts the cell
+lowers, compiles, and yields coherent roofline artifacts.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_cell_whisper_decode_single_pod():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import json
+        from repro.launch.dryrun import run_cell
+        r = run_cell("whisper_tiny", "decode_32k", "single")
+        assert not r.get("skipped")
+        assert r["chips"] == 256
+        t = r["roofline"]
+        assert t["compute_s"] > 0 and t["memory_s"] > 0
+        assert t["bottleneck"] in ("compute", "memory", "collective")
+        assert r["cost_analysis"]["flops_per_device"] > 0
+        # decode of a 39M-param model must be far below HBM capacity
+        mem = r["memory"]
+        total = mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]
+        assert total < 4 * 2**30, total
+        print("CELL_OK", json.dumps(t))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "CELL_OK" in out.stdout
+
+
+def test_skip_policy_cell_returns_skip_record():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell
+        r = run_cell("gemma_7b", "long_500k", "single")
+        assert r.get("skipped"), r
+        print("SKIP_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SKIP_OK" in out.stdout

@@ -1,0 +1,70 @@
+"""Flash attention kernel vs oracle: head-config/mask/shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+RNG = np.random.default_rng(2)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d",
+    [
+        (2, 4, 2, 128, 32),   # GQA
+        (1, 8, 1, 64, 16),    # MQA
+        (2, 4, 4, 128, 64),   # MHA
+        (1, 2, 2, 256, 128),  # long-ish
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_vs_ref(b, hq, hkv, s, d, causal):
+    q, k, v = _rand((b, hq, s, d)), _rand((b, hkv, s, d)), _rand((b, hkv, s, d))
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 1])
+def test_flash_sliding_window(window):
+    q, k, v = _rand((1, 2, 128, 32)), _rand((1, 2, 128, 32)), _rand((1, 2, 128, 32))
+    got = flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = (
+        _rand((1, 4, 128, 64), jnp.bfloat16),
+        _rand((1, 2, 128, 64), jnp.bfloat16),
+        _rand((1, 2, 128, 64), jnp.bfloat16),
+    )
+    got = flash_attention(q, k, v, block_q=64, block_k=64)
+    want = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_flash_window_requires_causal():
+    q = _rand((1, 1, 32, 16))
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, causal=False, window=8)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (4, 32, 256), (2, 2, 8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x, w = _rand(shape, dtype), _rand(shape[-1:], dtype)
+    got = rmsnorm(x, w)
+    want = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=2e-2 if dtype == jnp.bfloat16 else 1e-5
+    )

@@ -1,0 +1,81 @@
+"""Fused Strassen kernels vs oracles: divide/combine/fused-matmul sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coefficients import STRASSEN, WINOGRAD, get_scheme
+from repro.core.strassen import merge_quadrants, split_quadrants
+from repro.kernels.strassen.ops import strassen_matmul_fused, strassen_matmul_stages
+from repro.kernels.strassen.ref import (
+    combine_ref,
+    divide_ref,
+    strassen1_full_ref,
+    strassen1_matmul_ref,
+)
+from repro.kernels.strassen.strassen import (
+    combine_pallas,
+    divide_pallas,
+    strassen1_matmul_pallas,
+)
+
+RNG = np.random.default_rng(1)
+TOL = {jnp.float32: 5e-4, jnp.bfloat16: 5e-1}
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype)
+
+
+@pytest.mark.parametrize("scheme_name", ["strassen", "winograd", "naive8"])
+@pytest.mark.parametrize("m,h,w", [(1, 64, 64), (7, 32, 64), (4, 128, 128)])
+def test_divide_kernel(scheme_name, m, h, w):
+    scheme = get_scheme(scheme_name)
+    x = _rand((m, 4, h, w))
+    got = divide_pallas(x, scheme.a_coef, block=64)
+    want = divide_ref(x, scheme.a_coef)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("scheme_name", ["strassen", "winograd"])
+@pytest.mark.parametrize("m,h,w", [(1, 64, 64), (7, 32, 32)])
+def test_combine_kernel(scheme_name, m, h, w):
+    scheme = get_scheme(scheme_name)
+    x = _rand((m, scheme.n_mults, h, w))
+    got = combine_pallas(x, scheme.c_coef, block=32)
+    want = combine_ref(x, scheme.c_coef)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mb,m2,k2,n2", [(1, 64, 64, 64), (7, 32, 64, 32), (2, 128, 128, 128)])
+def test_strassen1_kernel_vs_ref(mb, m2, k2, n2, dtype):
+    aq = _rand((mb, 4, m2, k2), dtype)
+    bq = _rand((mb, 4, k2, n2), dtype)
+    got = strassen1_matmul_pallas(aq, bq, block_m=32, block_n=32, block_k=32)
+    want = strassen1_matmul_ref(aq, bq)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("pipeline", [strassen_matmul_stages, strassen_matmul_fused])
+def test_full_pipelines_vs_plain_matmul(depth, pipeline):
+    a, b = _rand((128, 128)), _rand((128, 128))
+    got = pipeline(a, b, depth=depth)
+    want = strassen1_full_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=5e-4)
+
+
+def test_fused_winograd_scheme():
+    a, b = _rand((64, 64)), _rand((64, 64))
+    got = strassen_matmul_fused(a, b, depth=1, scheme_name="winograd")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(strassen1_full_ref(a, b)), atol=5e-4, rtol=5e-4
+    )
+
+
+def test_quadrant_roundtrip_kernel_layout():
+    x = _rand((3, 64, 48))
+    assert np.allclose(np.asarray(merge_quadrants(split_quadrants(x))), np.asarray(x))

@@ -1,0 +1,165 @@
+"""Perf-feature correctness: chunkwise mLSTM, grouped MoE, fp8 cache, ring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.models.xlstm import init_mlstm_state, mlstm_chunkwise, _mlstm_step
+
+RNG = np.random.default_rng(21)
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+# ------------------------------------------------- chunkwise mLSTM == scan
+def _mlstm_sequential(q, k, v, ip, fp, state):
+    S = q.shape[2]
+    hs = []
+    st_ = dict(state)
+    for t in range(S):
+        st_, h = _mlstm_step(st_, (q[:, :, t], k[:, :, t], v[:, :, t], ip[:, :, t], fp[:, :, t]))
+        hs.append(h)
+    return st_, jnp.stack(hs, axis=2)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_mlstm_chunkwise_exact(chunk):
+    B, H, S, dk, dv = 2, 2, 32, 8, 12
+    q, k, v = _rand((B, H, S, dk)), _rand((B, H, S, dk)), _rand((B, H, S, dv))
+    ip, fp = _rand((B, H, S)) * 2, _rand((B, H, S)) * 2
+    state = {
+        "C": jnp.zeros((B, H, dk, dv)),
+        "n": jnp.zeros((B, H, dk)),
+        "m": jnp.full((B, H), -1e30),
+    }
+    st_seq, h_seq = _mlstm_sequential(q, k, v, ip, fp, state)
+    st_ch, h_ch = mlstm_chunkwise(q, k, v, ip, fp, state, chunk)
+    np.testing.assert_allclose(np.asarray(h_ch), np.asarray(h_seq), atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(st_ch["C"]), np.asarray(st_seq["C"]), atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(st_ch["m"]), np.asarray(st_seq["m"]), atol=1e-5)
+
+
+def test_mlstm_chunkwise_carried_state():
+    B, H, S, dk, dv = 1, 2, 16, 4, 4
+    q, k, v = _rand((B, H, S, dk)), _rand((B, H, S, dk)), _rand((B, H, S, dv))
+    ip, fp = _rand((B, H, S)), _rand((B, H, S))
+    state0 = {
+        "C": jnp.zeros((B, H, dk, dv)),
+        "n": jnp.zeros((B, H, dk)),
+        "m": jnp.full((B, H), -1e30),
+    }
+    mid, _ = _mlstm_sequential(q, k, v, ip, fp, state0)
+    _, h_seq = _mlstm_sequential(q, k, v, ip, fp, mid)
+    _, h_ch = mlstm_chunkwise(q, k, v, ip, fp, mid, 8)
+    np.testing.assert_allclose(np.asarray(h_ch), np.asarray(h_seq), atol=5e-5, rtol=5e-5)
+
+
+def test_mlstm_chunk_config_model_level():
+    cfg = get_smoke_config("xlstm_1_3b")
+    cfg_ch = dataclasses.replace(cfg, mlstm_chunk=8)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    l1, _ = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg)
+    l2, _ = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg_ch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-3, rtol=2e-3)
+
+
+# ------------------------------------------------- grouped MoE == global
+@pytest.mark.parametrize("arch", ["olmoe_1b_7b", "qwen2_moe_a2_7b"])
+@pytest.mark.parametrize("ep", [False, True])
+def test_grouped_moe_matches_global_with_ample_capacity(arch, ep):
+    cfg = dataclasses.replace(get_smoke_config(arch), capacity_factor=4.0)
+    cfg_g = dataclasses.replace(cfg, moe_group_dispatch=True, moe_expert_parallel=ep)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    l1, a1 = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg)
+    l2, a2 = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg_g)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-3, rtol=2e-3)
+    assert abs(float(a1) - float(a2)) < 1e-4
+
+
+def test_grouped_moe_grad_flows():
+    cfg = dataclasses.replace(
+        get_smoke_config("olmoe_1b_7b"), moe_group_dispatch=True, capacity_factor=2.0
+    )
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    g = jax.grad(lambda p: M.loss_fn(p, {"tokens": tokens, "labels": tokens}, cfg)[0])(params)
+    gnorm = sum(float(jnp.sum(x.astype(jnp.float32) ** 2)) for x in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+# ------------------------------------------------- quantized KV cache
+def test_fp8_cache_decode_close_to_full_precision():
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    cfg8 = dataclasses.replace(cfg, cache_dtype="float8_e4m3fn")
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    outs = {}
+    for name, c in (("full", cfg), ("fp8", cfg8)):
+        cache = M.init_cache(c, B, S + 4)
+        lp, cache = M.apply_prefill(params, {"tokens": tokens}, cache, c)
+        outs[name] = lp
+        assert bool(jnp.all(jnp.isfinite(lp)))
+    # fp8 shifts logits but must preserve the argmax most of the time
+    agree = float(jnp.mean(
+        (jnp.argmax(outs["full"], -1) == jnp.argmax(outs["fp8"], -1)).astype(jnp.float32)
+    ))
+    assert agree >= 0.5, agree
+
+
+def test_fp8_cache_halves_cache_bytes():
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    cfg8 = dataclasses.replace(cfg, cache_dtype="float8_e4m3fn")
+    c_full = M.init_cache(cfg, 2, 64)
+    c_fp8 = M.init_cache(cfg8, 2, 64)
+    b_full = sum(x.nbytes for x in jax.tree.leaves(c_full))
+    b_fp8 = sum(x.nbytes for x in jax.tree.leaves(c_fp8))
+    assert b_fp8 < 0.3 * b_full  # fp8 vs fp32 smoke dtype
+
+
+# ------------------------------------------------- strassen backend in-model
+@pytest.mark.parametrize("kind", ["strassen", "winograd", "strassen_fused"])
+def test_strassen_backend_model_equivalence(kind):
+    from repro.core.backend import MatmulBackend
+
+    cfg = get_smoke_config("internlm2_20b")
+    cfg_s = dataclasses.replace(
+        cfg, matmul_backend=MatmulBackend(kind=kind, depth=1, min_dim=16)
+    )
+    key = jax.random.PRNGKey(4)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    l1, _ = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg)
+    l2, _ = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg_s)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=5e-3, rtol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_ring_buffer_decode_matches_full(seed):
+    """Ring-buffer local attention == full-cache attention with same window."""
+    cfg = get_smoke_config("recurrentgemma_9b")
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    B, S = 1, 24  # window is 16 -> ring wraps
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _ = M.apply_train(params, {"tokens": tokens, "labels": tokens}, cfg)
+    cache = M.init_cache(cfg, B, 40)
+    lp, cache = M.apply_prefill(params, {"tokens": tokens}, cache, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lp), np.asarray(full_logits[:, -1]), atol=3e-3, rtol=3e-3
+    )
