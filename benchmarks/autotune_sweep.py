@@ -1,0 +1,155 @@
+"""Autotune crossover sweep: predicted-vs-measured per shape (paper §V-C).
+
+For each size the calibrated dispatcher enumerates every legal candidate on
+an 8-way host-platform mesh, records each candidate's predicted seconds,
+executes the selected candidate (plus the naive baseline) for a measured
+column, and checks the selected path's output against ``jnp.matmul``.
+
+The crossover the paper reports is a *distributed* effect: a single XLA
+device has no shuffle term, so the naive matmul wins every single-device
+size here (measured 0.9x at 8192^2 on CPU). On the mesh the naive path pays
+the SUMMA panel broadcasts — MLLib's coGroup shuffle in JAX clothing — and
+the dispatcher flips to a Strassen strategy once dims clear the leaf
+threshold, exactly the §V-C picture.
+
+Standalone (reliable device forcing — must happen before jax init):
+
+    PYTHONPATH=src python benchmarks/autotune_sweep.py \
+        [--sizes 256,2048,8192] [--out autotune_sweep.json] [--measure]
+
+Also registered as the ``autotune`` suite in ``benchmarks.run``; when jax
+is already initialized with one device the sweep degrades to local-only
+candidates and says so in the JSON.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # 8 host-platform devices, forced before any jax import.
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)  # `benchmarks` package when run as a script
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+
+def _make_mesh():
+    """(data, model) mesh over whatever devices exist; None if single-device."""
+    from repro.core.compat import make_mesh
+
+    d = jax.device_count()
+    if d < 2:
+        return None
+    model = 2
+    return make_mesh((d // model, model), ("data", "model"))
+
+
+def sweep(sizes=(256, 2048, 8192), *, min_dim=1024, max_depth=2, measure=False,
+          out_path="autotune_sweep.json"):
+    from benchmarks.common import emit, rand, time_fn
+    from repro.core import autotune
+
+    mesh = _make_mesh()
+    device_count = jax.device_count() if mesh is not None else 1
+    calib = autotune.calibrate()
+    rows = []
+    for n in sizes:
+        cands = autotune.enumerate_candidates(
+            n, n, n, max_depth=max_depth, min_dim=min_dim, mesh=mesh
+        )
+
+        def label_of(kind, scheme, depth):
+            if kind == "naive":
+                return "naive@d0"
+            if kind == scheme:  # local BFS candidate
+                return f"{kind}@d{depth}"
+            return f"{kind}[{scheme}]@d{depth}"  # mesh strategy per scheme
+
+        predictions = {
+            label_of(c.kind, c.scheme, c.depth): autotune.predict_seconds(
+                c, n, n, n, calib, device_count=device_count
+            )
+            for c in cands
+        }
+        decision = autotune.autotune(
+            n, n, n,
+            min_dim=min_dim, max_depth=max_depth, mesh=mesh,
+            calibration=calib, measure=measure,
+        )
+
+        a, b = rand((n, n)), rand((n, n))
+        naive_fn = jax.jit(lambda x, y: jnp.matmul(x, y))
+        want = naive_fn(a, b)
+        t_naive = time_fn(naive_fn, a, b, warmup=1, iters=2)
+        sel = decision.candidate
+        sel_fn = jax.jit(lambda x, y: autotune.execute(sel, x, y, mesh=mesh))
+        got = sel_fn(a, b)
+        t_sel = time_fn(sel_fn, a, b, warmup=1, iters=2)
+        scale = float(jnp.max(jnp.abs(want))) or 1.0
+        rel_err = float(jnp.max(jnp.abs(got - want))) / scale
+
+        label = label_of(decision.kind, decision.scheme, decision.depth)
+        rows.append({
+            "n": n,
+            "selected": label,
+            "source": decision.source,
+            "predicted_s": {k: round(v, 6) for k, v in sorted(predictions.items())},
+            "predicted_selected_s": decision.predicted_s,
+            "measured_selected_s": t_sel,
+            "measured_naive_s": t_naive,
+            "rel_err_vs_naive": rel_err,
+            "ok": rel_err < 2e-3,
+        })
+        emit(f"autotune[{n}]->{label}", t_sel,
+             f"naive={t_naive*1e6:.1f}us err={rel_err:.2e}")
+
+    payload = {
+        "device_kind": calib.device_kind,
+        "device_count": device_count,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "calibration": calib.to_dict(),
+        "min_dim": min_dim,
+        "max_depth": max_depth,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path}", flush=True)
+    return payload
+
+
+def run():
+    """benchmarks.run entry point (uses whatever devices jax already has)."""
+    sweep()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="256,2048,8192")
+    ap.add_argument("--min-dim", type=int, default=1024)
+    ap.add_argument("--max-depth", type=int, default=2)
+    ap.add_argument("--measure", action="store_true",
+                    help="time top-k candidates instead of trusting the model")
+    ap.add_argument("--out", default="autotune_sweep.json")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    payload = sweep(
+        sizes, min_dim=args.min_dim, max_depth=args.max_depth,
+        measure=args.measure, out_path=args.out,
+    )
+    for row in payload["rows"]:
+        print(f"# n={row['n']:6d} -> {row['selected']:24s} "
+              f"pred {row['predicted_selected_s']:.4f}s "
+              f"meas {row['measured_selected_s']:.4f}s "
+              f"naive {row['measured_naive_s']:.4f}s ok={row['ok']}")
+
+
+if __name__ == "__main__":
+    main()

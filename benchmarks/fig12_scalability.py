@@ -21,17 +21,18 @@ _CHILD = r"""
 import os, sys, json
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
 import functools, jax, jax.numpy as jnp
+from repro.core.compat import compiled_cost_analysis, make_mesh
 from repro.core.distributed import strassen_bfs_sharded
 from repro.runtime.elastic import plan_mesh
 n_dev = int(sys.argv[1])
 n = 1024
 shape, axes = ((n_dev,), ("data",)) if n_dev > 1 else ((1,), ("data",))
-mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh(shape, axes)
 a = jax.ShapeDtypeStruct((n, n), jnp.float32)
 fn = jax.jit(functools.partial(
     strassen_bfs_sharded, mesh=mesh, depth=2, batch_axes=("data",)))
 compiled = fn.lower(a, a).compile()
-cost = compiled.cost_analysis() or {}
+cost = compiled_cost_analysis(compiled)
 print(json.dumps({"devices": n_dev, "flops": cost.get("flops", 0.0)}))
 """
 

@@ -10,6 +10,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        autotune_sweep,
         fig8_fastest,
         fig9_partition,
         fig10_theory,
@@ -22,6 +23,7 @@ def main() -> None:
     )
 
     suites = {
+        "autotune": autotune_sweep.run,
         "fig8": fig8_fastest.run,
         "table6": table6_single_node.run,
         "table7": table7_leaf.run,

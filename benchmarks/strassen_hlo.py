@@ -18,8 +18,10 @@ from repro.core.strassen import strassen_matmul
 
 
 def _flops(fn, *specs) -> float:
+    from repro.core.compat import compiled_cost_analysis
+
     compiled = jax.jit(fn).lower(*specs).compile()
-    return float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    return float(compiled_cost_analysis(compiled).get("flops", 0.0))
 
 
 def run():

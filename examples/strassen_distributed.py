@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import make_mesh
 from repro.core.distributed import strassen_2d, strassen_bfs_sharded, strassen_shardmap
 
 print(f"devices: {jax.device_count()}")
@@ -29,8 +30,7 @@ a = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
 b = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
 want = a @ b
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 
 bfs = jax.jit(functools.partial(strassen_bfs_sharded, mesh=mesh, depth=2))
 got = bfs(a, b)
@@ -40,7 +40,7 @@ s2d = jax.jit(functools.partial(strassen_2d, mesh=mesh, depth=1))
 got = s2d(a, b)
 print(f"strassen_2d   max|err| = {float(jnp.max(jnp.abs(got - want))):.3e}")
 
-mesh7 = jax.make_mesh((7,), ("mult",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh7 = make_mesh((7,), ("mult",))
 smap = jax.jit(functools.partial(strassen_shardmap, mesh=mesh7))
 got = smap(a, b)
 print(f"shardmap(7)   max|err| = {float(jnp.max(jnp.abs(got - want))):.3e}")

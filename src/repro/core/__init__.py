@@ -7,6 +7,7 @@ Public API:
   backend       — pluggable matmul routing used by all model layers
   cost_model    — the paper's §IV stage-wise analytical cost model
 """
+from repro.core import compat  # noqa: F401  (applies jax version shims)
 from repro.core.coefficients import STRASSEN, WINOGRAD, NAIVE8, Scheme, get_scheme
 from repro.core.strassen import (
     strassen_matmul,
@@ -17,7 +18,10 @@ from repro.core.strassen import (
     merge_quadrants,
     leaf_count,
 )
-from repro.core.backend import MatmulBackend, matmul, NAIVE_BACKEND
+from repro.core.backend import MatmulBackend, matmul, NAIVE_BACKEND, AUTO_BACKEND
+# NOTE: the autotune *functions* stay namespaced (repro.core.autotune.autotune)
+# so the submodule attribute isn't shadowed; only the data types re-export.
+from repro.core.autotune import Calibration, Candidate, Decision, TuningCache
 
 __all__ = [
     "STRASSEN",
@@ -35,4 +39,9 @@ __all__ = [
     "MatmulBackend",
     "matmul",
     "NAIVE_BACKEND",
+    "AUTO_BACKEND",
+    "Calibration",
+    "Candidate",
+    "Decision",
+    "TuningCache",
 ]

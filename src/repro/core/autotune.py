@@ -1,0 +1,572 @@
+"""Shape-aware autotuning dispatcher behind ``MatmulBackend(kind="auto")``.
+
+The paper's core empirical result (§V-C) is a *crossover*: Strassen's
+7-multiplication scheme only beats the naive path once matrix dims are
+large relative to the leaf block, and the §IV stage-wise model predicts
+where. This module is the JAX analogue of that calibration + prediction
+loop, turned into a dispatcher:
+
+1. :func:`calibrate` runs two on-device micro-benchmarks — a leaf batched
+   matmul and a divide-level einsum, mirroring the paper's implicit
+   block-matmul / block-add calibration — and fits the environment
+   constants ``t_flop`` (seconds per scalar multiply-add) and ``t_elem``
+   (seconds per element through a divide/combine level).
+
+2. :func:`enumerate_candidates` lists every strategy that can legally run
+   a given (M, K, N): the naive XLA matmul, batched-BFS Strassen/Winograd
+   at each usable depth, and — when a mesh is supplied — every registered
+   strategy in :data:`repro.core.distributed.MESH_STRATEGIES` whose mesh
+   requirement holds.
+
+3. :func:`predict_seconds` costs each candidate with the calibrated
+   stage model (divide/combine element traffic * t_elem + leaf flops *
+   t_flop / leaf parallelism); :func:`autotune` picks the argmin, or with
+   ``measure=True`` times the top-k candidates on device and records the
+   measured winner.
+
+4. :class:`TuningCache` persists decisions as JSON keyed by
+   (shape, dtype, device kind+count, scheme set, min_dim, max_depth), so
+   jit-traced call sites resolve statically from the cache on reuse —
+   no re-calibration, no re-measurement.
+
+Calibration here is intra-device; the collective term for multi-host
+interconnects is a ROADMAP follow-on (measured-mode on a TPU mesh).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coefficients import get_scheme
+from repro.core.strassen import divide_level, strassen_matmul
+
+__all__ = [
+    "Candidate",
+    "Decision",
+    "Calibration",
+    "TuningCache",
+    "calibrate",
+    "get_calibration",
+    "enumerate_candidates",
+    "predict_seconds",
+    "measure_seconds",
+    "execute",
+    "autotune",
+    "cache_key",
+    "warm_for_model",
+]
+
+# Local (single-program) strategies the backend can dispatch without a mesh.
+LOCAL_SCHEMES: Tuple[str, ...] = ("strassen", "winograd")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One executable strategy instance for a fixed (M, K, N)."""
+
+    kind: str  # 'naive' | scheme name (local BFS) | registered mesh strategy
+    scheme: str = "strassen"
+    depth: int = 0
+
+    @property
+    def is_naive(self) -> bool:
+        return self.kind == "naive"
+
+    @property
+    def is_local(self) -> bool:
+        return self.kind in ("naive",) + LOCAL_SCHEMES
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """A routing decision plus the evidence it was made on."""
+
+    kind: str
+    scheme: str
+    depth: int
+    predicted_s: float
+    measured_s: Optional[float] = None
+    source: str = "predicted"  # predicted | measured | cache
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Decision":
+        return Decision(**d)
+
+    @property
+    def candidate(self) -> Candidate:
+        return Candidate(kind=self.kind, scheme=self.scheme, depth=self.depth)
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-environment constants, the JAX analogue of the paper's §IV fit."""
+
+    t_flop: float  # seconds per scalar multiply-add in the leaf matmul
+    t_elem: float  # seconds per element through a divide/combine einsum
+    device_kind: str = "cpu"
+    device_count: int = 1
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Calibration":
+        return Calibration(**d)
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    """Best-of-N wall clock for a blocking thunk (compile excluded by warmup)."""
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(sample_dim: int = 256, repeats: int = 3) -> Calibration:
+    """Fit (t_flop, t_elem) from two on-device micro-benchmarks.
+
+    Leaf benchmark: a rank-7 batched matmul — exactly the shape of the BFS
+    leaf stage. Divide benchmark: one :func:`divide_level` einsum — exactly
+    the divide/combine stage. Both mirror the paper's implicit calibration
+    (it plots theory and experiment in matching units).
+    """
+    d = sample_dim
+    scheme = get_scheme("strassen")
+    rank = scheme.n_mults
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (rank, d, d), jnp.float32)
+    b = jax.random.normal(key, (rank, d, d), jnp.float32)
+
+    leaf = jax.jit(lambda x, y: jnp.einsum("mij,mjk->mik", x, y))
+    t_leaf = _time_best(lambda: jax.block_until_ready(leaf(a, b)), repeats)
+    t_flop = t_leaf / (rank * 2.0 * d**3)
+
+    coef = jnp.asarray(scheme.a_coef)
+    div = jax.jit(lambda x: divide_level(x, coef))
+    t_div = _time_best(lambda: jax.block_until_ready(div(a)), repeats)
+    # divide_level: (rank, d, d) -> (rank*rank, d/2, d/2) output elements.
+    out_elems = rank * rank * (d // 2) * (d // 2)
+    t_elem = t_div / out_elems
+
+    dev = jax.devices()[0]
+    return Calibration(
+        t_flop=float(t_flop),
+        t_elem=float(t_elem),
+        device_kind=dev.platform,
+        device_count=jax.device_count(),
+    )
+
+
+_CALIBRATION: Optional[Calibration] = None
+
+
+def get_calibration() -> Calibration:
+    """Process-cached calibration (one micro-benchmark pair per process)."""
+    global _CALIBRATION
+    if _CALIBRATION is None:
+        _CALIBRATION = calibrate()
+    return _CALIBRATION
+
+
+# --------------------------------------------------------------------------
+# Candidate enumeration
+# --------------------------------------------------------------------------
+
+
+def _usable_depth(m: int, k: int, n: int, depth: int, min_dim: int) -> bool:
+    """depth levels are usable iff dims stay even and above the crossover floor
+    at every level — the same rule as MatmulBackend.effective_depth."""
+    for _ in range(depth):
+        if m % 2 or k % 2 or n % 2 or min(m, k, n) < min_dim:
+            return False
+        m, k, n = m // 2, k // 2, n // 2
+    return depth > 0
+
+
+def enumerate_candidates(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    schemes: Sequence[str] = LOCAL_SCHEMES,
+    max_depth: int = 3,
+    min_dim: int = 1024,
+    mesh=None,
+) -> List[Candidate]:
+    """All strategies that can legally run this shape (naive always can)."""
+    cands = [Candidate(kind="naive")]
+    depths = [d for d in range(1, max_depth + 1) if _usable_depth(m, k, n, d, min_dim)]
+    for scheme in schemes:
+        for d in depths:
+            cands.append(Candidate(kind=scheme, scheme=scheme, depth=d))
+    if mesh is not None and depths:
+        from repro.core.distributed import available_strategies
+
+        for scheme in schemes:
+            for name in available_strategies(mesh, scheme):
+                if name.startswith("strassen_shardmap"):
+                    # explicit one-level renditions
+                    cands.append(Candidate(kind=name, scheme=scheme, depth=1))
+                else:
+                    for d in depths:
+                        cands.append(Candidate(kind=name, scheme=scheme, depth=d))
+    return cands
+
+
+# --------------------------------------------------------------------------
+# Stage-wise prediction (paper §IV generalized to rectangular JAX stages)
+# --------------------------------------------------------------------------
+
+
+def predict_seconds(
+    cand: Candidate,
+    m: int,
+    k: int,
+    n: int,
+    calib: Calibration,
+    *,
+    device_count: int = 1,
+) -> float:
+    """Predicted wall-clock for one multiply under the calibrated model.
+
+    Mirrors :mod:`repro.core.cost_model`: each divide/combine level costs
+    its output-element traffic * t_elem; the leaf stage costs its flops *
+    t_flop divided by the leaf parallelization factor (paper's PF, min'd
+    with the device count). Single-program candidates have PF = 1: XLA
+    already uses the whole device, which is what t_flop measures.
+    """
+    flops_naive = 2.0 * m * k * n
+    if cand.is_naive:
+        # On a mesh the naive matmul 2D-parallelizes fully (MLLib regime),
+        # but pays the SUMMA panel broadcasts — the JAX analogue of MLLib's
+        # 2bn^2 coGroup shuffle (paper Table I), and the term Strassen's
+        # fewer leaves undercut at scale.
+        cost = flops_naive * calib.t_flop / max(device_count, 1)
+        if device_count > 1:
+            cost += k * (m + n) * math.sqrt(device_count) * calib.t_elem
+        return cost
+
+    rank = get_scheme(cand.scheme).n_mults
+    l = cand.depth
+    elem_cost = 0.0
+    # Divide levels i = 0..l-1: outputs rank^(i+1) quarter-blocks of A and B.
+    for i in range(l):
+        e_a = rank ** (i + 1) * (m * k) / 4.0 ** (i + 1)
+        e_b = rank ** (i + 1) * (k * n) / 4.0 ** (i + 1)
+        elem_cost += e_a + e_b
+    # Combine levels i = l-1..0: outputs rank^i blocks of C at level i.
+    for i in range(l):
+        elem_cost += rank**i * (m * n) / 4.0**i
+    leaf_flops = flops_naive * (rank / 8.0) ** l
+
+    if cand.kind in LOCAL_SCHEMES:
+        leaf_pf = 1.0
+        elem_pf = 1.0
+    elif cand.kind == "strassen_2d":
+        # 2D-parallel leaves spread each block product over the mesh;
+        # the leaf batch stays replicated so combine is collective-free.
+        leaf_pf = float(device_count)
+        elem_pf = 1.0
+    elif cand.kind.startswith("strassen_shardmap"):
+        # one explicit BFS level over the whole grid (mult times rows /
+        # rb*cb axes all carry leaf work); combine is a single psum of C.
+        leaf_pf = float(device_count)
+        elem_pf = 1.0
+    else:  # strassen_bfs_sharded and future BFS-batch strategies
+        leaf_pf = float(min(rank**l, device_count))
+        elem_pf = 1.0
+    return leaf_flops * calib.t_flop / leaf_pf + elem_cost * calib.t_elem / elem_pf
+
+
+# --------------------------------------------------------------------------
+# Execution + measurement
+# --------------------------------------------------------------------------
+
+
+def execute(
+    cand: Candidate,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    precision=None,
+    mesh=None,
+) -> jax.Array:
+    """Run one candidate. Raises KeyError for unknown mesh strategy names."""
+    if cand.is_naive:
+        return jnp.matmul(a, b, precision=precision)
+    if cand.kind in LOCAL_SCHEMES:
+        return strassen_matmul(
+            a, b, depth=cand.depth, scheme=cand.scheme, precision=precision
+        )
+    from repro.core.distributed import get_strategy
+
+    fn = get_strategy(cand.kind)
+    kwargs = {"mesh": mesh, "scheme": cand.scheme, "precision": precision}
+    if not cand.kind.startswith("strassen_shardmap"):
+        kwargs["depth"] = cand.depth
+    return fn(a, b, **kwargs)
+
+
+def measure_seconds(
+    cand: Candidate,
+    m: int,
+    k: int,
+    n: int,
+    dtype=jnp.float32,
+    *,
+    mesh=None,
+    precision=None,
+    repeats: int = 2,
+) -> float:
+    """Time one candidate end-to-end on device (compile excluded)."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    fn = jax.jit(lambda x, y: execute(cand, x, y, precision=precision, mesh=mesh))
+    return _time_best(lambda: jax.block_until_ready(fn(a, b)), repeats)
+
+
+# --------------------------------------------------------------------------
+# Persistent tuning cache
+# --------------------------------------------------------------------------
+
+
+def cache_key(
+    m: int,
+    k: int,
+    n: int,
+    dtype,
+    *,
+    device_kind: str,
+    device_count: int,
+    schemes: Sequence[str],
+    min_dim: int,
+    max_depth: int,
+    topo: str = "local",
+) -> str:
+    """``topo`` separates local from mesh resolutions: the candidate sets and
+    cost models differ, so a mesh decision must never answer a local lookup
+    (or vice versa) even at equal device counts."""
+    dt = jnp.dtype(dtype).name
+    return (
+        f"{m}x{k}x{n}|{dt}|{device_kind}:{device_count}|{topo}"
+        f"|{','.join(schemes)}|min{min_dim}|d{max_depth}"
+    )
+
+
+class TuningCache:
+    """JSON-backed decision store: key -> Decision (+ the calibration used).
+
+    Load-then-lookup is the startup path for serving: the engine resolves
+    every projection shape from here, so jit tracing never re-measures.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, Decision] = {}
+        self.calibration: Optional[Calibration] = None
+        self._suspended = False
+        if path and os.path.exists(path):
+            self.load(path)
+
+    @contextlib.contextmanager
+    def deferred(self):
+        """Batch many put/save cycles into one file write (warm-up loops)."""
+        self._suspended = True
+        try:
+            yield self
+        finally:
+            self._suspended = False
+            self.save()
+
+    def load(self, path: str) -> "TuningCache":
+        with open(path) as f:
+            raw = json.load(f)
+        self.entries = {
+            k: Decision.from_dict(v) for k, v in raw.get("decisions", {}).items()
+        }
+        if raw.get("calibration"):
+            self.calibration = Calibration.from_dict(raw["calibration"])
+        return self
+
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        if not path or self._suspended:
+            return
+        payload = {
+            "decisions": {k: d.to_dict() for k, d in self.entries.items()},
+            "calibration": self.calibration.to_dict() if self.calibration else None,
+        }
+        # atomic: decisions may be read by a concurrently starting engine
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+
+    def get(self, key: str) -> Optional[Decision]:
+        return self.entries.get(key)
+
+    def put(self, key: str, decision: Decision) -> None:
+        self.entries[key] = decision
+
+
+_PROCESS_CACHES: Dict[str, TuningCache] = {}
+
+
+def process_cache(path: Optional[str]) -> TuningCache:
+    """One shared TuningCache per path (or one anonymous in-memory cache)."""
+    key = path or ""
+    if key not in _PROCESS_CACHES:
+        _PROCESS_CACHES[key] = TuningCache(path)
+    return _PROCESS_CACHES[key]
+
+
+# --------------------------------------------------------------------------
+# The dispatcher
+# --------------------------------------------------------------------------
+
+
+def autotune(
+    m: int,
+    k: int,
+    n: int,
+    dtype=jnp.float32,
+    *,
+    min_dim: int = 1024,
+    max_depth: int = 3,
+    schemes: Sequence[str] = LOCAL_SCHEMES,
+    cache: Optional[TuningCache] = None,
+    calibration: Optional[Calibration] = None,
+    measure: bool = False,
+    top_k: int = 3,
+    mesh=None,
+    precision=None,
+) -> Decision:
+    """Pick the predicted- (or measured-) fastest strategy for this shape.
+
+    Cache hits return immediately (source='cache') — before calibration, so
+    a warm cache costs zero device time. ``measure=True`` times the top-k
+    predicted candidates and records the measured winner, the
+    theory-vs-practice loop of the paper's §V.
+    """
+    dev = jax.devices()[0]
+    if mesh is not None:
+        device_count = len(mesh.devices.flatten())
+        topo = "mesh" + "x".join(str(s) for s in mesh.devices.shape)
+    else:
+        device_count = 1
+        topo = "local"
+    key = cache_key(
+        m,
+        k,
+        n,
+        dtype,
+        device_kind=dev.platform,
+        device_count=device_count,
+        schemes=schemes,
+        min_dim=min_dim,
+        max_depth=max_depth,
+        topo=topo,
+    )
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            return dataclasses.replace(hit, source="cache")
+
+    calib = calibration or (cache.calibration if cache else None) or get_calibration()
+    cands = enumerate_candidates(
+        m, k, n, schemes=schemes, max_depth=max_depth, min_dim=min_dim, mesh=mesh
+    )
+    scored = sorted(
+        cands,
+        key=lambda c: predict_seconds(c, m, k, n, calib, device_count=device_count),
+    )
+    best = scored[0]
+    predicted = predict_seconds(best, m, k, n, calib, device_count=device_count)
+    measured = None
+    if measure:
+        timed = [
+            (
+                measure_seconds(
+                    c, m, k, n, dtype, mesh=mesh, precision=precision
+                ),
+                c,
+            )
+            for c in scored[: max(top_k, 1)]
+        ]
+        measured, best = min(timed, key=lambda t: t[0])
+        predicted = predict_seconds(best, m, k, n, calib, device_count=device_count)
+
+    decision = Decision(
+        kind=best.kind,
+        scheme=best.scheme,
+        depth=best.depth,
+        predicted_s=float(predicted),
+        measured_s=None if measured is None else float(measured),
+        source="measured" if measure else "predicted",
+    )
+    if cache is not None:
+        cache.calibration = cache.calibration or calib
+        cache.put(key, decision)
+        cache.save()
+    return decision
+
+
+def warm_for_model(
+    cfg, *, tokens: Sequence[int] = (1, 128, 2048), batches: Sequence[int] = (1, 8)
+) -> int:
+    """Pre-resolve decisions for a model's dense-projection shapes.
+
+    Serving startup path: the flattened M a projection sees is batch*seq at
+    prefill and batch at decode, so we resolve every (batch * tokens) x
+    (d_in, d_out) combination up front. Shapes outside this grid (odd
+    batch sizes, other call sites) still resolve lazily at trace time —
+    the warm-up narrows the cold path, it doesn't guarantee its absence.
+    Returns the number of resolutions performed.
+    """
+    from repro.core import backend as _backend
+
+    be = cfg.matmul_backend
+    if be.kind != "auto":
+        return 0
+    hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    outs = {
+        cfg.n_heads * hd,  # q / o projections
+        cfg.n_kv_heads * hd,  # k / v projections
+        cfg.d_ff,  # mlp up/gate
+        cfg.d_model,  # o / down projections
+    }
+    ins = {cfg.d_model, cfg.d_ff}
+    ms = sorted({b * t for b in batches for t in tokens} | set(batches))
+    count = 0
+    with process_cache(be.tuning_cache).deferred():
+        for m in ms:
+            for d_in in ins:
+                for d_out in outs:
+                    if d_in <= 0 or d_out <= 0:
+                        continue
+                    _backend.resolve_auto(m, d_in, d_out, cfg.dtype, be)
+                    count += 1
+    return count

@@ -14,7 +14,8 @@ naive path (exactly like Stark's ``threshold`` leaf cutoff).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.coefficients import get_scheme
 from repro.core.strassen import strassen_matmul
 
-__all__ = ["MatmulBackend", "matmul", "NAIVE_BACKEND"]
+__all__ = ["MatmulBackend", "matmul", "NAIVE_BACKEND", "AUTO_BACKEND", "resolve_auto"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,17 +31,30 @@ class MatmulBackend:
     """Configuration for routing matmuls.
 
     Attributes:
-      kind: 'naive' | 'strassen' | 'winograd' | 'strassen_fused'.
-      depth: Strassen recursion depth (paper's p - q). Ignored for naive.
+      kind: 'naive' | 'strassen' | 'winograd' | 'strassen_fused' | 'auto'.
+        'auto' defers the choice to the calibrated cost model in
+        :mod:`repro.core.autotune`, resolved per (M, K, N, dtype) at trace
+        time and cached — so jitted call sites pay the decision once.
+      depth: Strassen recursion depth (paper's p - q). Ignored for naive;
+        for 'auto' it is the maximum depth the tuner may pick.
       min_dim: minimum of (M, K, N) below which the call falls back to the
         naive matmul (the paper's leaf threshold / crossover point).
       precision: jax precision for leaf matmuls ('default' | 'highest'...).
+      tuning_cache: optional path to a persistent autotune JSON cache
+        ('auto' only). Decisions found there are reused verbatim — the
+        serving engine points this at its warmed startup cache.
+      measure: 'auto' only — time the top predicted candidates on device
+        instead of trusting the model (slower first trace, exact winner).
+      schemes: coefficient schemes 'auto' may choose between.
     """
 
     kind: str = "naive"
     depth: int = 1
     min_dim: int = 1024
     precision: Optional[str] = None
+    tuning_cache: Optional[str] = None
+    measure: bool = False
+    schemes: Tuple[str, ...] = ("strassen", "winograd")
 
     @property
     def scheme_name(self) -> str:
@@ -68,6 +82,39 @@ class MatmulBackend:
 
 
 NAIVE_BACKEND = MatmulBackend(kind="naive")
+AUTO_BACKEND = MatmulBackend(kind="auto", depth=3)
+
+
+@functools.lru_cache(maxsize=4096)
+def resolve_auto(
+    m: int, k: int, n: int, dtype_name: str, backend: MatmulBackend
+) -> MatmulBackend:
+    """Resolve kind='auto' to a concrete backend for one (M, K, N, dtype).
+
+    Runs at trace time with static shapes, so under jit each call site pays
+    the cost-model lookup exactly once per shape; the lru_cache makes every
+    later trace (and every other call site with the same shape) free. A
+    persistent ``backend.tuning_cache`` survives process restarts.
+    """
+    from repro.core import autotune
+
+    cache = autotune.process_cache(backend.tuning_cache)
+    decision = autotune.autotune(
+        m,
+        k,
+        n,
+        jnp.dtype(dtype_name),
+        min_dim=backend.min_dim,
+        max_depth=max(backend.depth, 1),
+        schemes=backend.schemes,
+        cache=cache,
+        measure=backend.measure,
+    )
+    if decision.kind == "naive":
+        return dataclasses.replace(backend, kind="naive", measure=False)
+    return dataclasses.replace(
+        backend, kind=decision.scheme, depth=decision.depth, measure=False
+    )
 
 
 def matmul(
@@ -99,6 +146,9 @@ def matmul(
     m = 1
     for d in lead:
         m *= d
+
+    if backend.kind == "auto":
+        backend = resolve_auto(m, k, n, jnp.result_type(x, w).name, backend)
 
     depth = backend.effective_depth(m, k, n) if backend.kind != "naive" else 0
     if depth == 0:

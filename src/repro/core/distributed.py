@@ -36,11 +36,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.coefficients import Scheme, STRASSEN, get_scheme
 from repro.core import strassen as _s
+from repro.core.compat import shard_map as _shard_map
 
 __all__ = [
     "strassen_bfs_sharded",
     "strassen_2d",
     "strassen_shardmap",
+    "MESH_STRATEGIES",
+    "register_strategy",
+    "get_strategy",
+    "available_strategies",
 ]
 
 
@@ -177,12 +182,11 @@ def strassen_shardmap_2d(
         contrib = c_coef[:, p].astype(mp_rows.dtype)[:, None, None] * mp_rows[None]
         return jax.lax.psum(contrib, mult_axis)  # (4, blk, n/2)
 
-    quads = jax.shard_map(
+    quads = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P()),
         out_specs=P(None, rows_axis, None),
-        check_vma=False,
     )(a, b)  # (4, n/2, n/2)
     return _s.merge_quadrants(quads)
 
@@ -278,12 +282,11 @@ def strassen_shardmap_3d(
         )
         return jax.lax.psum(contrib, mult_axis)  # (4, blk_r, blk_c)
 
-    quads = jax.shard_map(
+    quads = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P()),
         out_specs=P(None, rb_axis, cb_axis),
-        check_vma=False,
     )(a, b)  # (4, n/2, n/2) tile-sharded
     return _s.merge_quadrants(quads) if merge else quads
 
@@ -329,11 +332,77 @@ def strassen_shardmap(
         quads = jax.lax.psum(contrib, axis)
         return _s.merge_quadrants(quads)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(a, b)
+
+
+# --------------------------------------------------------------------------
+# Strategy registry — the autotuner's enumeration surface.
+#
+# Each entry maps a stable name to (fn, requires). ``requires(mesh, scheme)``
+# answers whether the strategy can run on that mesh at all (e.g. the shardmap
+# variants need a mesh axis exactly equal to the scheme rank); the autotuner
+# only costs candidates whose requirement holds. Registration is open so
+# future PRs (Pallas-fused mesh leaf, 2.5D variants) plug in without touching
+# the dispatcher.
+# --------------------------------------------------------------------------
+
+
+def _axes_cover(mesh: Mesh, names: Sequence[str]) -> bool:
+    return all(n in mesh.shape for n in names)
+
+
+def _req_bfs(mesh: Mesh, scheme: Scheme) -> bool:
+    return _axes_cover(mesh, ("data", "model"))
+
+
+def _req_2d(mesh: Mesh, scheme: Scheme) -> bool:
+    return _axes_cover(mesh, ("data", "model"))
+
+
+def _req_shardmap(mesh: Mesh, scheme: Scheme) -> bool:
+    return mesh.shape.get("mult") == scheme.n_mults
+
+
+def _req_shardmap_2d(mesh: Mesh, scheme: Scheme) -> bool:
+    return "rows" in mesh.shape and mesh.shape.get("mult") == scheme.n_mults
+
+
+def _req_shardmap_3d(mesh: Mesh, scheme: Scheme) -> bool:
+    return (
+        _axes_cover(mesh, ("rb", "cb"))
+        and mesh.shape.get("mult") == scheme.n_mults
+    )
+
+
+MESH_STRATEGIES: dict = {}
+
+
+def register_strategy(name: str, fn, requires) -> None:
+    """Register a distributed matmul strategy for autotune enumeration."""
+    MESH_STRATEGIES[name] = (fn, requires)
+
+
+def get_strategy(name: str):
+    return MESH_STRATEGIES[name][0]
+
+
+def available_strategies(mesh: Optional[Mesh], scheme: Scheme | str = STRASSEN):
+    """Names of registered strategies whose mesh requirement holds."""
+    if mesh is None:
+        return []
+    if isinstance(scheme, str):
+        scheme = get_scheme(scheme)
+    return [n for n, (_, req) in MESH_STRATEGIES.items() if req(mesh, scheme)]
+
+
+register_strategy("strassen_bfs_sharded", strassen_bfs_sharded, _req_bfs)
+register_strategy("strassen_2d", strassen_2d, _req_2d)
+register_strategy("strassen_shardmap", strassen_shardmap, _req_shardmap)
+register_strategy("strassen_shardmap_2d", strassen_shardmap_2d, _req_shardmap_2d)
+register_strategy("strassen_shardmap_3d", strassen_shardmap_3d, _req_shardmap_3d)

@@ -207,7 +207,9 @@ def run_cell(
     # multiply while-loop bodies by trip count — see launch/hlo_analysis).
     hlo_text = compiled.as_text()
     costs = analyze_hlo(hlo_text)
-    xla_cost = compiled.cost_analysis() or {}
+    from repro.core.compat import compiled_cost_analysis
+
+    xla_cost = compiled_cost_analysis(compiled)
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]

@@ -6,7 +6,7 @@ initialization, and smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
@@ -15,9 +15,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """The assigned production mesh: 16x16 per pod; 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 16):
@@ -25,6 +23,4 @@ def make_mesh_for(n_devices: int, model_parallel: int = 16):
     from repro.runtime.elastic import plan_mesh
 
     shape, axes = plan_mesh(n_devices, model_parallel=model_parallel)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

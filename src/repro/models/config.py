@@ -79,6 +79,11 @@ class ModelConfig:
     #                        "float8_e4m3fn" halves serving cache memory)
     # The paper's technique as a first-class feature: matmul routing.
     matmul_backend: MatmulBackend = NAIVE_BACKEND
+    # Turn on the calibrated autotune dispatcher for every dense projection:
+    # rewrites matmul_backend to kind='auto' (keeping its min_dim/precision/
+    # cache settings), so each projection shape picks naive-vs-Strassen from
+    # the cost model instead of a hand-set kind/depth.
+    matmul_autotune: bool = False
 
     # Training-time knobs used by train_step lowering.
     remat: bool = True
@@ -87,6 +92,12 @@ class ModelConfig:
     attn_k_chunk: int = 1024
 
     def __post_init__(self):
+        if self.matmul_autotune and self.matmul_backend.kind != "auto":
+            object.__setattr__(
+                self,
+                "matmul_backend",
+                dataclasses.replace(self.matmul_backend, kind="auto", depth=3),
+            )
         if self.n_heads and self.d_model and self.head_dim is None:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         if self.family in ("ssm", "hybrid") or "mlstm" in self.block_pattern:

@@ -27,10 +27,29 @@ class ServeConfig:
     max_seq: int = 2048
     temperature: float = 0.0  # 0 -> greedy
     eos_id: int = -1  # -1 -> never stop early
+    # Persistent autotune cache for kind='auto' backends: the engine loads
+    # it at startup and pre-resolves the common dense-projection shapes so
+    # typical prefill/decode traces dispatch from the cache; shapes outside
+    # the warmed (batch, tokens) grid still resolve lazily at trace time.
+    tuning_cache: Optional[str] = None
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = ServeConfig()):
+        if cfg.matmul_backend.kind == "auto":
+            from repro.core import autotune
+
+            if serve_cfg.tuning_cache and not cfg.matmul_backend.tuning_cache:
+                cfg = dataclasses.replace(
+                    cfg,
+                    matmul_backend=dataclasses.replace(
+                        cfg.matmul_backend, tuning_cache=serve_cfg.tuning_cache
+                    ),
+                )
+            # decode resolves at 1 token/seq; prefill at up to max_seq tokens
+            autotune.warm_for_model(
+                cfg, tokens=(1, min(128, serve_cfg.max_seq), serve_cfg.max_seq)
+            )
         self.cfg = cfg
         self.params = params
         self.serve = serve_cfg

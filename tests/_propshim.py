@@ -1,0 +1,114 @@
+"""Tiny vendored fallback for ``hypothesis`` (given/settings/strategies).
+
+When the real dependency is installed (see requirements-dev.txt) the test
+modules import it and this file is inert. When it is absent, this shim runs
+each property test over a *seeded fixed-example grid*: boundary values
+first, then deterministic pseudo-random draws — same seed every run, so
+failures reproduce. No shrinking, no database, no adaptive search; just
+enough surface for the four property-test modules to collect and run.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    """A deterministic example stream: boundaries first, then seeded draws."""
+
+    def __init__(self, boundary, draw):
+        self._boundary = list(boundary)  # always-tried examples
+        self._draw = draw  # rng -> value
+
+    def examples(self, count: int, seed: int):
+        rng = random.Random(seed)
+        out = list(self._boundary[:count])
+        while len(out) < count:
+            out.append(self._draw(rng))
+        return out
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+    bounds = [min_value, max_value] if min_value != max_value else [min_value]
+    return _Strategy(bounds, lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(opts, lambda rng: opts[rng.randrange(len(opts))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy([False, True], lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_ignored) -> _Strategy:
+    bounds = [min_value, max_value]
+    return _Strategy(bounds, lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    sampled_from=sampled_from,
+    booleans=booleans,
+    floats=floats,
+)
+
+
+def _stable_seed(name: str) -> int:
+    # hash() is salted per-process; crc32 keeps the grid identical across runs
+    return zlib.crc32(name.encode())
+
+
+def given(**strats):
+    def deco(fn):
+        state = {"max_examples": _DEFAULT_EXAMPLES}
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            count = state["max_examples"]
+            base = _stable_seed(fn.__name__)
+            grids = {
+                name: s.examples(count, base ^ _stable_seed(name))
+                for name, s in strats.items()
+            }
+            for i in range(count):
+                drawn = {name: grids[name][i] for name in strats}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest must not see the drawn params as fixtures: drop the
+        # __wrapped__ link and present only the non-strategy parameters.
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper._shim_state = state
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Apply example-count to a @given-wrapped test; other knobs are no-ops."""
+
+    def deco(fn):
+        st = getattr(fn, "_shim_state", None)
+        if st is not None:
+            st["max_examples"] = max_examples
+        return fn
+
+    return deco
+
+
+class HealthCheck:
+    """Placeholder so ``suppress_health_check=[...]`` kwargs don't crash."""
+
+    too_slow = data_too_large = filter_too_much = None
+    all = classmethod(lambda cls: [])

@@ -1,0 +1,22 @@
+"""Test-session environment: force a multi-device CPU host platform.
+
+Must run before the first ``import jax`` anywhere in the process (device
+count locks at jax init — same idiom as bayespec's config.py), which is why
+it lives at conftest import time rather than in a fixture. 8 host-platform
+devices let the mesh/shard_map paths (test_distributed, autotune mesh
+candidates) exercise real multi-device code on CPU; tests that need a
+different count (e.g. the 512-device dry-run) spawn subprocesses and set
+their own XLA_FLAGS.
+"""
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+# src/ layout without requiring an editable install (pyproject makes
+# `pip install -e .` work too; this keeps bare `python -m pytest` green).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,273 @@
+"""Autotuned kind='auto' dispatcher: correctness, guards, cache, cost model."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored grid shim
+    from _propshim import given, settings, strategies as st
+
+from repro.core import autotune
+from repro.core.autotune import (
+    Calibration,
+    Candidate,
+    Decision,
+    TuningCache,
+    cache_key,
+    enumerate_candidates,
+    predict_seconds,
+)
+from repro.core.backend import MatmulBackend, matmul, resolve_auto
+from repro.core.cost_model import paper_stage_count, total_cost
+
+RNG = np.random.default_rng(17)
+
+# Fixed synthetic constants: decisions in these tests must never depend on
+# the machine the suite happens to run on.
+CALIB = Calibration(t_flop=1e-11, t_elem=1e-9, device_kind="test", device_count=1)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32), dtype)
+
+
+def _auto_backend(**kw):
+    kw.setdefault("kind", "auto")
+    kw.setdefault("depth", 2)
+    return MatmulBackend(**kw)
+
+
+@pytest.fixture(autouse=True)
+def _synthetic_calibration(monkeypatch):
+    """No micro-benchmarks and no cross-test lru_cache leakage."""
+    monkeypatch.setattr(autotune, "_CALIBRATION", CALIB)
+    monkeypatch.setattr(autotune, "_PROCESS_CACHES", {})
+    resolve_auto.cache_clear()
+
+
+# ------------------------------------------------------------- correctness
+@settings(max_examples=20, deadline=None)
+@given(
+    logm=st.integers(min_value=5, max_value=8),
+    logk=st.integers(min_value=5, max_value=8),
+    logn=st.integers(min_value=5, max_value=8),
+    min_dim=st.sampled_from([1, 64, 4096]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_auto_matches_matmul(logm, logk, logn, min_dim, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = 2**logm, 2**logk, 2**logn
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    got = matmul(x, w, _auto_backend(min_dim=min_dim))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+@pytest.mark.parametrize("shape", [(96, 96, 96), (100, 60, 36), (33, 65, 17)])
+def test_auto_odd_and_non_pow2_shapes(shape):
+    """Divisibility guard: odd dims route to shallower depth or naive."""
+    m, k, n = shape
+    x, w = _rand((m, k)), _rand((k, n))
+    got = matmul(x, w, _auto_backend(min_dim=1))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-3), (jnp.bfloat16, 1.5e-1)])
+def test_auto_dtypes(dtype, tol):
+    x, w = _rand((128, 128), dtype), _rand((128, 128), dtype)
+    got = matmul(x, w, _auto_backend(min_dim=1))
+    want = jnp.matmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_auto_under_jit_and_batched_lead_dims():
+    x, w = _rand((4, 32, 128)), _rand((128, 64))
+    be = _auto_backend(min_dim=1)
+    got = jax.jit(lambda a, b: matmul(a, b, be))(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+# ------------------------------------------------------------------ guards
+def test_never_selects_strassen_below_min_dim():
+    for m, k, n in [(512, 512, 512), (1023, 1024, 1024), (64, 4096, 4096)]:
+        cands = enumerate_candidates(m, k, n, min_dim=1024)
+        assert cands == [Candidate(kind="naive")], (m, k, n, cands)
+        d = autotune.autotune(m, k, n, min_dim=1024, calibration=CALIB)
+        assert d.kind == "naive" and d.depth == 0
+
+
+def test_depth_respects_divisibility_per_level():
+    # 1028 = 4 * 257: two halvings possible, not three.
+    cands = enumerate_candidates(1028, 1028, 1028, min_dim=1, max_depth=3)
+    depths = {c.depth for c in cands if c.kind == "strassen"}
+    assert depths == {1, 2}
+
+
+def test_enumeration_matches_backend_effective_depth():
+    be = MatmulBackend(kind="strassen", depth=3, min_dim=256)
+    for dims in [(1024, 1024, 1024), (512, 2048, 1024), (640, 640, 640)]:
+        cands = enumerate_candidates(*dims, min_dim=256, max_depth=3)
+        max_enum = max((c.depth for c in cands if c.kind == "strassen"), default=0)
+        assert max_enum == be.effective_depth(*dims), dims
+
+
+def test_larger_shapes_prefer_strassen_smaller_prefer_naive():
+    """The §V-C crossover under fixed constants: selection flips with n."""
+    small = autotune.autotune(256, 256, 256, calibration=CALIB, min_dim=1024)
+    large = autotune.autotune(8192, 8192, 8192, calibration=CALIB, min_dim=1024)
+    assert small.kind == "naive"
+    assert large.kind in ("strassen", "winograd") and large.depth >= 1
+
+
+# ------------------------------------------------------------------- cache
+def test_cache_round_trip_no_remeasure(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "tuning.json")
+    cache = TuningCache(path)
+    d1 = autotune.autotune(
+        4096, 4096, 4096, calibration=CALIB, cache=cache, measure=True, top_k=1
+    )
+    assert d1.source == "measured" and d1.measured_s is not None
+    assert os.path.exists(path)
+
+    # Fresh load: identical decision, and neither measurement nor
+    # calibration may run again.
+    def boom(*a, **k):
+        raise AssertionError("re-measured on a warm cache")
+
+    monkeypatch.setattr(autotune, "measure_seconds", boom)
+    monkeypatch.setattr(autotune, "calibrate", boom)
+    cache2 = TuningCache(path)
+    assert cache2.calibration == CALIB  # calibration persists alongside
+    d2 = autotune.autotune(4096, 4096, 4096, cache=cache2, measure=True, top_k=1)
+    assert d2.source == "cache"
+    assert (d2.kind, d2.scheme, d2.depth) == (d1.kind, d1.scheme, d1.depth)
+    assert d2.measured_s == d1.measured_s
+
+
+def test_cache_key_separates_dtype_and_shape():
+    kw = dict(device_kind="cpu", device_count=1, schemes=("strassen",),
+              min_dim=1024, max_depth=2)
+    k1 = cache_key(512, 512, 512, jnp.float32, **kw)
+    k2 = cache_key(512, 512, 512, jnp.bfloat16, **kw)
+    k3 = cache_key(512, 512, 1024, jnp.float32, **kw)
+    assert len({k1, k2, k3}) == 3
+
+
+def test_backend_resolution_is_cached_per_shape(monkeypatch):
+    be = _auto_backend(min_dim=1)
+    calls = []
+    real = autotune.autotune
+
+    def counting(*a, **k):
+        calls.append(a[:3])
+        return real(*a, **k)
+
+    monkeypatch.setattr(autotune, "autotune", counting)
+    x, w = _rand((64, 64)), _rand((64, 64))
+    matmul(x, w, be)
+    matmul(x, w, be)  # same shape: lru-cached, no second decision
+    assert len(calls) == 1
+
+
+# -------------------------------------------------- cost model regressions
+def test_paper_stage_count_matches_eq25():
+    """Stark's Spark-stage count is 2(p-q)+2 — pinned against eq. 25."""
+    for p, q in [(10, 8), (12, 8), (14, 10), (14, 4)]:
+        n, b = 2**p, 2 ** (p - q)
+        assert paper_stage_count(n, b) == 2 * (p - q) + 2
+
+
+def test_stark_vs_mllib_advantage_monotone_in_n():
+    """Predicted stark/mllib ratio decreases monotonically with n (§V-C)."""
+    ratios = [
+        total_cost("stark", n, 16, cores=25) / total_cost("mllib", n, 16, cores=25)
+        for n in (2048, 4096, 8192, 16384, 32768)
+    ]
+    assert all(a > b for a, b in zip(ratios, ratios[1:])), ratios
+
+
+def test_jax_crossover_monotone_in_n():
+    """Auto model: strassen-vs-naive predicted ratio falls monotonically."""
+    c = Candidate(kind="strassen", scheme="strassen", depth=1)
+    naive = Candidate(kind="naive")
+    ratios = [
+        predict_seconds(c, n, n, n, CALIB) / predict_seconds(naive, n, n, n, CALIB)
+        for n in (512, 1024, 2048, 4096, 8192, 16384)
+    ]
+    assert all(a > b for a, b in zip(ratios, ratios[1:])), ratios
+
+
+def test_calibrated_constants_positive():
+    calib = autotune.calibrate(sample_dim=64, repeats=1)
+    assert calib.t_flop > 0.0 and calib.t_elem > 0.0
+    assert calib.device_kind and calib.device_count >= 1
+
+
+def test_predictions_positive_and_naive_flops_exact():
+    assert predict_seconds(Candidate(kind="naive"), 100, 200, 300, CALIB) == (
+        pytest.approx(2.0 * 100 * 200 * 300 * CALIB.t_flop)
+    )
+    for c in enumerate_candidates(2048, 2048, 2048, min_dim=1, max_depth=3):
+        assert predict_seconds(c, 2048, 2048, 2048, CALIB) > 0.0
+
+
+# ---------------------------------------------------------- mesh candidates
+def test_mesh_enumeration_and_dispatch():
+    """On a (data, model) mesh the registered strategies become candidates
+    and the selected one still matches the naive product."""
+    from repro.core.compat import make_mesh
+
+    if jax.device_count() < 2:
+        pytest.skip("needs the conftest multi-device host platform")
+    mesh = make_mesh((jax.device_count() // 2, 2), ("data", "model"))
+    cands = enumerate_candidates(512, 512, 512, min_dim=64, max_depth=2, mesh=mesh)
+    kinds = {c.kind for c in cands}
+    assert {"naive", "strassen", "strassen_bfs_sharded", "strassen_2d"} <= kinds
+
+    d = autotune.autotune(
+        512, 512, 512, min_dim=64, max_depth=1, mesh=mesh,
+        calibration=dataclasses.replace(CALIB, device_count=jax.device_count()),
+    )
+    x, w = _rand((512, 512)), _rand((512, 512))
+    got = autotune.execute(d.candidate, x, w, mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+# ---------------------------------------------------------- config plumbing
+def test_model_config_autotune_flag_rewrites_backend():
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    assert cfg.matmul_backend.kind != "auto"
+    cfg_auto = dataclasses.replace(cfg, matmul_autotune=True)
+    assert cfg_auto.matmul_backend.kind == "auto"
+    assert hash(cfg_auto) is not None  # stays usable as a static jit arg
+
+
+def test_warm_for_model_counts_resolutions():
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    cfg = dataclasses.replace(cfg, matmul_autotune=True)
+    n = autotune.warm_for_model(cfg, tokens=(1, 64))
+    assert n > 0
+    # every warmed shape now resolves from the lru cache: no new decisions
+    info_before = resolve_auto.cache_info().currsize
+    autotune.warm_for_model(cfg, tokens=(1, 64))
+    assert resolve_auto.cache_info().currsize == info_before

@@ -29,12 +29,12 @@ def _run(n_devices: int, code: str) -> str:
 def test_bfs_sharded_and_2d_match_matmul():
     out = _run(8, """
         import functools, jax, jax.numpy as jnp, numpy as np
+        from repro.core.compat import make_mesh
         from repro.core.distributed import strassen_bfs_sharded, strassen_2d
         rng = np.random.default_rng(0)
         a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         for fn, depth in ((strassen_bfs_sharded, 2), (strassen_2d, 1)):
             got = jax.jit(functools.partial(fn, mesh=mesh, depth=depth))(a, b)
             err = float(jnp.max(jnp.abs(got - a @ b)))
@@ -47,12 +47,12 @@ def test_bfs_sharded_and_2d_match_matmul():
 def test_shardmap_level_single_allreduce():
     out = _run(7, """
         import functools, jax, jax.numpy as jnp, numpy as np
+        from repro.core.compat import make_mesh
         from repro.core.distributed import strassen_shardmap
         rng = np.random.default_rng(1)
         a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
         b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
-        mesh = jax.make_mesh((7,), ("mult",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((7,), ("mult",))
         fn = jax.jit(functools.partial(strassen_shardmap, mesh=mesh))
         err = float(jnp.max(jnp.abs(fn(a, b) - a @ b)))
         assert err < 5e-4, err

@@ -63,9 +63,11 @@ def test_analyzer_xla_flops_undercount_demo():
     def step(x, _):
         return x @ x, None
 
+    from repro.core.compat import compiled_cost_analysis
+
     f = jax.jit(lambda x: jax.lax.scan(step, x, None, length=trips)[0])
     compiled = f.lower(jax.ShapeDtypeStruct((d, d), jnp.float32)).compile()
-    xla = float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    xla = float(compiled_cost_analysis(compiled).get("flops", 0.0))
     ours = analyze_hlo(compiled.as_text()).dot_flops
     assert ours == trips * 2 * d**3
     assert xla < ours  # XLA counts the body once

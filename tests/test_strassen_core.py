@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored grid shim
+    from _propshim import given, settings, strategies as st
 
 from repro.core import (
     NAIVE8,

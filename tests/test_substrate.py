@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored grid shim
+    from _propshim import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_for_host
