@@ -17,6 +17,16 @@ Standalone (reliable device forcing — must happen before jax init):
     PYTHONPATH=src python benchmarks/autotune_sweep.py \
         [--sizes 256,2048,8192] [--out autotune_sweep.json] [--measure]
 
+CI smoke mode — small dims on the forced 8-device host mesh, plus a gate:
+
+    PYTHONPATH=src python benchmarks/autotune_sweep.py --smoke
+
+``--smoke`` shrinks sizes/min_dim so the run finishes in minutes, dumps
+the decision telemetry alongside the crossover table, and EXITS NON-ZERO
+if the chosen kind at the largest smoke dim regresses to naive (or any
+selected path fails the correctness check) — the bench-smoke CI job's
+pass/fail signal.
+
 Also registered as the ``autotune`` suite in ``benchmarks.run``; when jax
 is already initialized with one device the sweep degrades to local-only
 candidates and says so in the JSON.
@@ -51,14 +61,15 @@ def _make_mesh():
     return make_mesh((d // model, model), ("data", "model"))
 
 
-def sweep(sizes=(256, 2048, 8192), *, min_dim=1024, max_depth=2, measure=False,
-          out_path="autotune_sweep.json"):
+def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
+          out_path="autotune_sweep.json", calibration=None):
     from benchmarks.common import emit, rand, time_fn
     from repro.core import autotune
 
     mesh = _make_mesh()
     device_count = jax.device_count() if mesh is not None else 1
-    calib = autotune.calibrate()
+    calib = calibration or autotune.calibrate()
+    autotune.get_telemetry().reset()
     rows = []
     for n in sizes:
         cands = autotune.enumerate_candidates(
@@ -115,9 +126,13 @@ def sweep(sizes=(256, 2048, 8192), *, min_dim=1024, max_depth=2, measure=False,
         "device_count": device_count,
         "mesh": dict(mesh.shape) if mesh is not None else None,
         "calibration": calib.to_dict(),
+        "calibration_source": "pinned" if calibration else "measured",
         "min_dim": min_dim,
         "max_depth": max_depth,
         "rows": rows,
+        # Decision telemetry for the run: cache hit/miss counters, chosen
+        # kind per resolution, predicted-vs-measured seconds per decision.
+        "telemetry": autotune.get_telemetry().snapshot(),
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -130,25 +145,74 @@ def run():
     sweep()
 
 
+# Smoke-mode defaults: small enough for a CPU CI runner, large enough that
+# the largest dim clears min_dim at depth >= 1 and the mesh strategies can
+# out-predict the naive SUMMA term. min_dim sits between the first two
+# sizes so the table shows the §V-C flip: 128 -> naive, 256+ -> Strassen.
+SMOKE_SIZES = (128, 256, 512)
+SMOKE_MIN_DIM = 192
+
+
+def smoke_calibration():
+    """Pinned constants for the CI gate: the pass/fail signal must depend on
+    the code's candidate set and cost model, not on whatever t_flop/t_elem
+    ratio a loaded shared runner happens to measure at job time. The ratios
+    mirror a typical CPU-host fit (elem ~100x flop, coll ~4x elem)."""
+    from repro.core import autotune
+
+    dev = jax.devices()[0]
+    return autotune.Calibration(
+        t_flop=1e-11,
+        t_elem=1e-9,
+        t_coll=4e-9,
+        device_kind=dev.platform,
+        device_count=jax.device_count(),
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--sizes", default="256,2048,8192")
+    # 4096 is the largest default: above it the interpret-mode Pallas leaf
+    # (CPU hosts) unrolls thousands of grid steps at trace time and the
+    # measured column takes longer than the information is worth. On a real
+    # TPU (compiled leaf) pass --sizes 256,2048,8192,16384 to reproduce the
+    # paper-scale crossover table.
+    ap.add_argument("--sizes", default="256,2048,4096")
     ap.add_argument("--min-dim", type=int, default=1024)
     ap.add_argument("--max-depth", type=int, default=2)
     ap.add_argument("--measure", action="store_true",
                     help="time top-k candidates instead of trusting the model")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small dims, and fail if the largest dim "
+                         "selects naive or any correctness check fails")
     ap.add_argument("--out", default="autotune_sweep.json")
     args = ap.parse_args()
-    sizes = tuple(int(s) for s in args.sizes.split(","))
+    calibration = None
+    if args.smoke:
+        sizes, min_dim = SMOKE_SIZES, SMOKE_MIN_DIM
+        calibration = smoke_calibration()
+    else:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+        min_dim = args.min_dim
     payload = sweep(
-        sizes, min_dim=args.min_dim, max_depth=args.max_depth,
-        measure=args.measure, out_path=args.out,
+        sizes, min_dim=min_dim, max_depth=args.max_depth,
+        measure=args.measure, out_path=args.out, calibration=calibration,
     )
     for row in payload["rows"]:
         print(f"# n={row['n']:6d} -> {row['selected']:24s} "
               f"pred {row['predicted_selected_s']:.4f}s "
               f"meas {row['measured_selected_s']:.4f}s "
               f"naive {row['measured_naive_s']:.4f}s ok={row['ok']}")
+    if args.smoke:
+        top = payload["rows"][-1]
+        if not all(r["ok"] for r in payload["rows"]):
+            print("# SMOKE FAIL: a selected path failed its correctness check")
+            sys.exit(1)
+        if top["selected"].startswith("naive"):
+            print(f"# SMOKE FAIL: n={top['n']} regressed to naive; "
+                  f"predicted table: {top['predicted_s']}")
+            sys.exit(1)
+        print(f"# smoke ok: n={top['n']} -> {top['selected']}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ min(b^2.807, cores) alongside (cores=1 here).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import model as M

@@ -15,7 +15,6 @@ Strassen-backend run (the paper's technique in the training path):
 import argparse
 import dataclasses
 import json
-import os
 
 from repro.core.backend import MatmulBackend
 from repro.launch.train import train_loop

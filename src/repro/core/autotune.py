@@ -25,12 +25,22 @@ loop, turned into a dispatcher:
    measured winner.
 
 4. :class:`TuningCache` persists decisions as JSON keyed by
-   (shape, dtype, device kind+count, scheme set, min_dim, max_depth), so
-   jit-traced call sites resolve statically from the cache on reuse —
-   no re-calibration, no re-measurement.
+   (shape, dtype, device kind+count, scheme set, min_dim, max_depth, and
+   optionally a call-site tag), so jit-traced call sites resolve
+   statically from the cache on reuse — no re-calibration, no
+   re-measurement. Call-site tags let same-shape projections (e.g. a QKV
+   and an MLP projection of equal width) diverge under measured mode.
 
-Calibration here is intra-device; the collective term for multi-host
-interconnects is a ROADMAP follow-on (measured-mode on a TPU mesh).
+Three constants, two regimes: ``t_flop``/``t_elem`` come from intra-device
+micro-benchmarks; ``t_coll`` is fit separately by
+:func:`calibrate_collective` (an all-gather + reduce-scatter round trip
+over every addressable device) and prices the *interconnect* element
+traffic of the mesh strategies — divide/combine resharding, combine psums,
+SUMMA panel broadcasts. Every resolution is logged to the process
+:class:`Telemetry` (cache hit/miss, chosen kind, predicted-vs-measured
+seconds), which the serving engine exposes in its stats and
+``benchmarks/autotune_sweep.py`` dumps. Real-TPU measured-mode calibration
+remains a ROADMAP follow-on.
 """
 from __future__ import annotations
 
@@ -45,7 +55,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.coefficients import get_scheme
 from repro.core.strassen import divide_level, strassen_matmul
@@ -55,19 +64,27 @@ __all__ = [
     "Decision",
     "Calibration",
     "TuningCache",
+    "Telemetry",
+    "TelemetryEvent",
     "calibrate",
+    "calibrate_collective",
     "get_calibration",
+    "get_telemetry",
     "enumerate_candidates",
     "predict_seconds",
     "measure_seconds",
     "execute",
     "autotune",
     "cache_key",
+    "model_call_sites",
     "warm_for_model",
 ]
 
 # Local (single-program) strategies the backend can dispatch without a mesh.
 LOCAL_SCHEMES: Tuple[str, ...] = ("strassen", "winograd")
+# The Pallas fused-leaf pipeline: local, but gated on the leaf running
+# (compat.pallas_leaf_mode) rather than always-legal like the einsum BFS.
+FUSED_KIND = "strassen_fused"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,7 +101,7 @@ class Candidate:
 
     @property
     def is_local(self) -> bool:
-        return self.kind in ("naive",) + LOCAL_SCHEMES
+        return self.kind in ("naive", FUSED_KIND) + LOCAL_SCHEMES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +135,10 @@ class Calibration:
     t_elem: float  # seconds per element through a divide/combine einsum
     device_kind: str = "cpu"
     device_count: int = 1
+    # seconds per element through an interconnect collective (all-gather /
+    # reduce-scatter); 0.0 means "not calibrated" (single device or a
+    # pre-t_coll cache) and predictions fall back to t_elem, the old model.
+    t_coll: float = 0.0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -138,13 +159,49 @@ def _time_best(fn, repeats: int = 3) -> float:
     return best
 
 
+def calibrate_collective(sample_dim: int = 512, repeats: int = 3) -> float:
+    """Fit ``t_coll`` from an all-gather + reduce-scatter micro-benchmark.
+
+    A row-sharded (devices * rows, sample_dim) f32 array makes one
+    all-gather and one reduce-scatter round trip over a 1-D mesh of every
+    addressable device — the two collectives GSPMD lowers the mesh
+    strategies' divide/combine reshards and combine psums into. The fit is
+    seconds per element through a collective, the interconnect analogue of
+    ``t_elem`` (which measures an intra-device einsum pass and badly
+    underprices cross-chip traffic). Returns 0.0 on a single device.
+    """
+    d = jax.device_count()
+    if d < 2:
+        return 0.0
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import make_mesh, shard_map
+
+    mesh = make_mesh((d,), ("coll",))
+    rows = max(1, sample_dim // d) * d
+    x = jnp.ones((rows, sample_dim), jnp.float32)
+
+    def body(x_loc):
+        g = jax.lax.all_gather(x_loc, "coll", tiled=True)
+        return jax.lax.psum_scatter(g, "coll", scatter_dimension=0, tiled=True)
+
+    fn = jax.jit(
+        shard_map(body, mesh=mesh, in_specs=(P("coll", None),), out_specs=P("coll", None))
+    )
+    t = _time_best(lambda: jax.block_until_ready(fn(x)), repeats)
+    # Two full passes of the array through the interconnect (gather + scatter).
+    return t / (2.0 * rows * sample_dim)
+
+
 def calibrate(sample_dim: int = 256, repeats: int = 3) -> Calibration:
-    """Fit (t_flop, t_elem) from two on-device micro-benchmarks.
+    """Fit (t_flop, t_elem, t_coll) from on-device micro-benchmarks.
 
     Leaf benchmark: a rank-7 batched matmul — exactly the shape of the BFS
     leaf stage. Divide benchmark: one :func:`divide_level` einsum — exactly
     the divide/combine stage. Both mirror the paper's implicit calibration
-    (it plots theory and experiment in matching units).
+    (it plots theory and experiment in matching units). The collective
+    benchmark (:func:`calibrate_collective`) fits the separate interconnect
+    constant the mesh-strategy terms use.
     """
     d = sample_dim
     scheme = get_scheme("strassen")
@@ -170,6 +227,7 @@ def calibrate(sample_dim: int = 256, repeats: int = 3) -> Calibration:
         t_elem=float(t_elem),
         device_kind=dev.platform,
         device_count=jax.device_count(),
+        t_coll=float(calibrate_collective(repeats=repeats)),
     )
 
 
@@ -209,12 +267,22 @@ def enumerate_candidates(
     min_dim: int = 1024,
     mesh=None,
 ) -> List[Candidate]:
-    """All strategies that can legally run this shape (naive always can)."""
+    """All strategies that can legally run this shape (naive always can).
+
+    ``strassen_fused`` (the Pallas fused-leaf pipeline) enumerates whenever
+    the leaf actually runs on this host — compiled on TPU, interpret mode
+    on CPU — per :func:`repro.core.compat.pallas_leaf_mode`.
+    """
+    from repro.core import compat
+
     cands = [Candidate(kind="naive")]
     depths = [d for d in range(1, max_depth + 1) if _usable_depth(m, k, n, d, min_dim)]
     for scheme in schemes:
         for d in depths:
             cands.append(Candidate(kind=scheme, scheme=scheme, depth=d))
+    if depths and "strassen" in schemes and compat.pallas_leaf_mode() != "none":
+        for d in depths:
+            cands.append(Candidate(kind=FUSED_KIND, scheme="strassen", depth=d))
     if mesh is not None and depths:
         from repro.core.distributed import available_strategies
 
@@ -246,12 +314,20 @@ def predict_seconds(
     """Predicted wall-clock for one multiply under the calibrated model.
 
     Mirrors :mod:`repro.core.cost_model`: each divide/combine level costs
-    its output-element traffic * t_elem; the leaf stage costs its flops *
-    t_flop divided by the leaf parallelization factor (paper's PF, min'd
-    with the device count). Single-program candidates have PF = 1: XLA
-    already uses the whole device, which is what t_flop measures.
+    its output-element traffic * a per-element constant; the leaf stage
+    costs its flops * t_flop divided by the leaf parallelization factor
+    (paper's PF, min'd with the device count). Single-program candidates
+    have PF = 1: XLA already uses the whole device, which is what t_flop
+    measures. Element traffic that crosses the interconnect — mesh-strategy
+    resharding, combine psums, SUMMA panel broadcasts — is priced at
+    ``t_coll`` (falling back to ``t_elem`` for pre-t_coll calibrations);
+    local HBM traffic stays at ``t_elem``. Fused-leaf candidates skip the
+    last level's materialized traffic: the final divide + products +
+    combine run in VMEM, so only one read of the level-(l-1) operands and
+    one write of C is charged.
     """
     flops_naive = 2.0 * m * k * n
+    t_coll = calib.t_coll if calib.t_coll > 0.0 else calib.t_elem
     if cand.is_naive:
         # On a mesh the naive matmul 2D-parallelizes fully (MLLib regime),
         # but pays the SUMMA panel broadcasts — the JAX analogue of MLLib's
@@ -259,39 +335,66 @@ def predict_seconds(
         # fewer leaves undercut at scale.
         cost = flops_naive * calib.t_flop / max(device_count, 1)
         if device_count > 1:
-            cost += k * (m + n) * math.sqrt(device_count) * calib.t_elem
+            cost += k * (m + n) * math.sqrt(device_count) * t_coll
         return cost
 
     rank = get_scheme(cand.scheme).n_mults
     l = cand.depth
+    fused = cand.kind in (FUSED_KIND, "strassen_fused_sharded")
+    # Levels whose intermediates are materialized: all l for the einsum
+    # pipelines, l-1 when the last level runs fused in VMEM.
+    lm = l - 1 if fused else l
     elem_cost = 0.0
-    # Divide levels i = 0..l-1: outputs rank^(i+1) quarter-blocks of A and B.
-    for i in range(l):
+    # Divide levels i = 0..lm-1: outputs rank^(i+1) quarter-blocks of A and B.
+    for i in range(lm):
         e_a = rank ** (i + 1) * (m * k) / 4.0 ** (i + 1)
         e_b = rank ** (i + 1) * (k * n) / 4.0 ** (i + 1)
         elem_cost += e_a + e_b
-    # Combine levels i = l-1..0: outputs rank^i blocks of C at level i.
-    for i in range(l):
+    # Combine levels i = lm-1..0: outputs rank^i blocks of C at level i.
+    for i in range(lm):
         elem_cost += rank**i * (m * n) / 4.0**i
+    if fused:
+        # The fused level reads its operands once and writes C once; the
+        # 7/4x M-term blowup never touches HBM.
+        elem_cost += rank ** (l - 1) * (m * k + k * n + m * n) / 4.0 ** (l - 1)
     leaf_flops = flops_naive * (rank / 8.0) ** l
 
-    if cand.kind in LOCAL_SCHEMES:
+    coll_cost = 0.0
+    if cand.is_local:
         leaf_pf = 1.0
         elem_pf = 1.0
+        t_comm = calib.t_elem
+    elif cand.kind == "strassen_fused_sharded":
+        # Row-parallel over every mesh axis (the strategy row-shards across
+        # the full device grid): every stage runs per-device on local
+        # stripes; the only interconnect term is replicating B to every
+        # row shard.
+        leaf_pf = float(device_count)
+        elem_pf = float(device_count)
+        t_comm = calib.t_elem
+        coll_cost = k * n * t_coll
     elif cand.kind == "strassen_2d":
         # 2D-parallel leaves spread each block product over the mesh;
-        # the leaf batch stays replicated so combine is collective-free.
+        # the leaf batch stays replicated so combine is collective-free,
+        # but divide/combine traffic reshards across the grid.
         leaf_pf = float(device_count)
         elem_pf = 1.0
+        t_comm = t_coll
     elif cand.kind.startswith("strassen_shardmap"):
         # one explicit BFS level over the whole grid (mult times rows /
         # rb*cb axes all carry leaf work); combine is a single psum of C.
         leaf_pf = float(device_count)
         elem_pf = 1.0
+        t_comm = t_coll
     else:  # strassen_bfs_sharded and future BFS-batch strategies
         leaf_pf = float(min(rank**l, device_count))
         elem_pf = 1.0
-    return leaf_flops * calib.t_flop / leaf_pf + elem_cost * calib.t_elem / elem_pf
+        t_comm = t_coll
+    return (
+        leaf_flops * calib.t_flop / leaf_pf
+        + elem_cost * t_comm / elem_pf
+        + coll_cost
+    )
 
 
 # --------------------------------------------------------------------------
@@ -310,6 +413,12 @@ def execute(
     """Run one candidate. Raises KeyError for unknown mesh strategy names."""
     if cand.is_naive:
         return jnp.matmul(a, b, precision=precision)
+    if cand.kind == FUSED_KIND:
+        from repro.kernels.strassen.ops import strassen_matmul_fused
+
+        return strassen_matmul_fused(
+            a, b, depth=cand.depth, scheme_name=cand.scheme, precision=precision
+        )
     if cand.kind in LOCAL_SCHEMES:
         return strassen_matmul(
             a, b, depth=cand.depth, scheme=cand.scheme, precision=precision
@@ -359,15 +468,26 @@ def cache_key(
     min_dim: int,
     max_depth: int,
     topo: str = "local",
+    site: Optional[str] = None,
 ) -> str:
     """``topo`` separates local from mesh resolutions: the candidate sets and
     cost models differ, so a mesh decision must never answer a local lookup
-    (or vice versa) even at equal device counts."""
+    (or vice versa) even at equal device counts.
+
+    ``site`` is an optional call-site tag (e.g. ``"attn.wq"``) threaded from
+    the model stack: tagged entries are keyed per call site, so same-shape
+    projections can hold different (measured) decisions. ``site=None``
+    yields the shape-only key, which tagged lookups also fall back to in
+    predicted mode (the prediction is shape-only anyway).
+    """
     dt = jnp.dtype(dtype).name
-    return (
+    key = (
         f"{m}x{k}x{n}|{dt}|{device_kind}:{device_count}|{topo}"
         f"|{','.join(schemes)}|min{min_dim}|d{max_depth}"
     )
+    if site:
+        key += f"|site:{site}"
+    return key
 
 
 class TuningCache:
@@ -432,6 +552,84 @@ class TuningCache:
         self.entries[key] = decision
 
 
+# --------------------------------------------------------------------------
+# Decision telemetry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryEvent:
+    """One autotune resolution: where it came from and what it chose."""
+
+    key: str
+    site: Optional[str]
+    kind: str
+    scheme: str
+    depth: int
+    source: str  # predicted | measured | cache
+    cache_hit: bool
+    predicted_s: float
+    measured_s: Optional[float] = None
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class Telemetry:
+    """Process-wide autotune decision log.
+
+    Every :func:`autotune` call records one event — cache hit or miss, the
+    chosen kind, and the predicted (and, under measure mode, measured)
+    seconds — so a serving engine or benchmark can report exactly which
+    matmul strategy each traced shape resolved to and on what evidence.
+    The event log is a ring buffer (``max_events``, default 4096): a
+    long-running server with churning prefill shapes keeps the newest
+    decisions while the hit/miss counters stay exact totals.
+    """
+
+    def __init__(self, max_events: int = 4096) -> None:
+        self.max_events = max_events
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.events: List[TelemetryEvent] = []
+
+    def record(self, event: TelemetryEvent) -> None:
+        if event.cache_hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        self.events.append(event)
+        if len(self.events) > self.max_events:
+            del self.events[: len(self.events) - self.max_events]
+
+    def kind_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def snapshot(self) -> Dict:
+        return {
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "kinds": self.kind_counts(),
+            "decisions": [e.to_dict() for e in self.events],
+        }
+
+    def reset(self) -> None:
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.events = []
+
+
+_TELEMETRY = Telemetry()
+
+
+def get_telemetry() -> Telemetry:
+    """The process telemetry instance (reset() it between experiments)."""
+    return _TELEMETRY
+
+
 _PROCESS_CACHES: Dict[str, TuningCache] = {}
 
 
@@ -463,6 +661,7 @@ def autotune(
     top_k: int = 3,
     mesh=None,
     precision=None,
+    site: Optional[str] = None,
 ) -> Decision:
     """Pick the predicted- (or measured-) fastest strategy for this shape.
 
@@ -470,6 +669,12 @@ def autotune(
     a warm cache costs zero device time. ``measure=True`` times the top-k
     predicted candidates and records the measured winner, the
     theory-vs-practice loop of the paper's §V.
+
+    ``site`` keys the decision per call site (see :func:`cache_key`). In
+    predicted mode a tagged miss falls back to the shape-only entry — the
+    prediction cannot differ per site — but measured mode never does: a
+    measured site decision must come from measuring *that* site's key, so
+    e.g. same-width QKV and MLP projections can diverge.
     """
     dev = jax.devices()[0]
     if mesh is not None:
@@ -478,11 +683,7 @@ def autotune(
     else:
         device_count = 1
         topo = "local"
-    key = cache_key(
-        m,
-        k,
-        n,
-        dtype,
+    key_kwargs = dict(
         device_kind=dev.platform,
         device_count=device_count,
         schemes=schemes,
@@ -490,10 +691,35 @@ def autotune(
         max_depth=max_depth,
         topo=topo,
     )
+    key = cache_key(m, k, n, dtype, site=site, **key_kwargs)
     if cache is not None:
         hit = cache.get(key)
+        if hit is None and site and not measure:
+            hit = cache.get(cache_key(m, k, n, dtype, **key_kwargs))
+        if hit is not None and hit.kind in (FUSED_KIND, "strassen_fused_sharded"):
+            # Re-validate fused decisions against THIS host: a cache warmed
+            # where the Pallas leaf ran must not route to it on a build
+            # where it cannot (enumeration would have excluded it).
+            from repro.core import compat
+
+            if compat.pallas_leaf_mode() == "none":
+                hit = None
         if hit is not None:
-            return dataclasses.replace(hit, source="cache")
+            decision = dataclasses.replace(hit, source="cache")
+            _TELEMETRY.record(
+                TelemetryEvent(
+                    key=key,
+                    site=site,
+                    kind=decision.kind,
+                    scheme=decision.scheme,
+                    depth=decision.depth,
+                    source="cache",
+                    cache_hit=True,
+                    predicted_s=decision.predicted_s,
+                    measured_s=decision.measured_s,
+                )
+            )
+            return decision
 
     calib = calibration or (cache.calibration if cache else None) or get_calibration()
     cands = enumerate_candidates(
@@ -529,44 +755,75 @@ def autotune(
     )
     if cache is not None:
         cache.calibration = cache.calibration or calib
-        cache.put(key, decision)
+        # Predicted decisions are shape-only by construction, so a tagged
+        # resolution stores under the shape-only key — every other site of
+        # the same shape then hits via the fallback instead of duplicating
+        # identical entries. Only measured decisions are site-specific.
+        store_key = (
+            key if (measure or not site) else cache_key(m, k, n, dtype, **key_kwargs)
+        )
+        cache.put(store_key, decision)
         cache.save()
+    _TELEMETRY.record(
+        TelemetryEvent(
+            key=key,
+            site=site,
+            kind=decision.kind,
+            scheme=decision.scheme,
+            depth=decision.depth,
+            source=decision.source,
+            cache_hit=False,
+            predicted_s=decision.predicted_s,
+            measured_s=decision.measured_s,
+        )
+    )
     return decision
+
+
+def model_call_sites(cfg) -> List[Tuple[str, int, int]]:
+    """(site, d_in, d_out) for every tagged dense projection of a model.
+
+    These are exactly the tags :mod:`repro.models.attention` /
+    :mod:`repro.models.mlp` thread through ``linear`` — keep the two lists
+    in sync so warmed cache keys match runtime lookups.
+    """
+    hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    sites = [
+        ("attn.wq", cfg.d_model, cfg.n_heads * hd),
+        ("attn.wk", cfg.d_model, cfg.n_kv_heads * hd),
+        ("attn.wv", cfg.d_model, cfg.n_kv_heads * hd),
+        ("attn.wo", cfg.n_heads * hd, cfg.d_model),
+        ("mlp.up", cfg.d_model, cfg.d_ff),
+        ("mlp.down", cfg.d_ff, cfg.d_model),
+    ]
+    if cfg.glu:
+        sites.append(("mlp.gate", cfg.d_model, cfg.d_ff))
+    return [(s, i, o) for s, i, o in sites if i > 0 and o > 0]
 
 
 def warm_for_model(
     cfg, *, tokens: Sequence[int] = (1, 128, 2048), batches: Sequence[int] = (1, 8)
 ) -> int:
-    """Pre-resolve decisions for a model's dense-projection shapes.
+    """Pre-resolve decisions for a model's dense-projection call sites.
 
     Serving startup path: the flattened M a projection sees is batch*seq at
     prefill and batch at decode, so we resolve every (batch * tokens) x
-    (d_in, d_out) combination up front. Shapes outside this grid (odd
-    batch sizes, other call sites) still resolve lazily at trace time —
-    the warm-up narrows the cold path, it doesn't guarantee its absence.
-    Returns the number of resolutions performed.
+    call-site combination up front, under the same site tags the layers
+    pass at trace time. Shapes outside this grid (odd batch sizes,
+    untagged call sites) still resolve lazily at trace time — the warm-up
+    narrows the cold path, it doesn't guarantee its absence. Returns the
+    number of resolutions performed.
     """
     from repro.core import backend as _backend
 
     be = cfg.matmul_backend
     if be.kind != "auto":
         return 0
-    hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
-    outs = {
-        cfg.n_heads * hd,  # q / o projections
-        cfg.n_kv_heads * hd,  # k / v projections
-        cfg.d_ff,  # mlp up/gate
-        cfg.d_model,  # o / down projections
-    }
-    ins = {cfg.d_model, cfg.d_ff}
     ms = sorted({b * t for b in batches for t in tokens} | set(batches))
     count = 0
     with process_cache(be.tuning_cache).deferred():
         for m in ms:
-            for d_in in ins:
-                for d_out in outs:
-                    if d_in <= 0 or d_out <= 0:
-                        continue
-                    _backend.resolve_auto(m, d_in, d_out, cfg.dtype, be)
-                    count += 1
+            for site, d_in, d_out in model_call_sites(cfg):
+                _backend.resolve_auto(m, d_in, d_out, cfg.dtype, be, site)
+                count += 1
     return count

@@ -20,7 +20,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.coefficients import get_scheme
 from repro.core.strassen import strassen_matmul
 
 __all__ = ["MatmulBackend", "matmul", "NAIVE_BACKEND", "AUTO_BACKEND", "resolve_auto"]
@@ -87,14 +86,21 @@ AUTO_BACKEND = MatmulBackend(kind="auto", depth=3)
 
 @functools.lru_cache(maxsize=4096)
 def resolve_auto(
-    m: int, k: int, n: int, dtype_name: str, backend: MatmulBackend
+    m: int,
+    k: int,
+    n: int,
+    dtype_name: str,
+    backend: MatmulBackend,
+    site: Optional[str] = None,
 ) -> MatmulBackend:
     """Resolve kind='auto' to a concrete backend for one (M, K, N, dtype).
 
     Runs at trace time with static shapes, so under jit each call site pays
     the cost-model lookup exactly once per shape; the lru_cache makes every
-    later trace (and every other call site with the same shape) free. A
-    persistent ``backend.tuning_cache`` survives process restarts.
+    later trace (and every other call site with the same shape and site
+    tag) free. A persistent ``backend.tuning_cache`` survives process
+    restarts. ``site`` keys the decision per call site (e.g. "attn.wq" vs
+    "mlp.up"), so equal-shape projections can diverge under measured mode.
     """
     from repro.core import autotune
 
@@ -109,9 +115,14 @@ def resolve_auto(
         schemes=backend.schemes,
         cache=cache,
         measure=backend.measure,
+        site=site,
     )
     if decision.kind == "naive":
         return dataclasses.replace(backend, kind="naive", measure=False)
+    if decision.kind == "strassen_fused":
+        return dataclasses.replace(
+            backend, kind="strassen_fused", depth=decision.depth, measure=False
+        )
     return dataclasses.replace(
         backend, kind=decision.scheme, depth=decision.depth, measure=False
     )
@@ -122,6 +133,7 @@ def matmul(
     w: jax.Array,
     backend: MatmulBackend = NAIVE_BACKEND,
     w_logical=None,
+    site: Optional[str] = None,
 ) -> jax.Array:
     """``x @ w`` routed through the configured backend.
 
@@ -135,6 +147,10 @@ def matmul(
         without this GSPMD loses the sharding at the quadrant reshapes and
         silently replicates the leaf products (hypothesis log, EXPERIMENTS
         §Perf iteration 3).
+      site: optional call-site tag ("attn.wq", "mlp.up", ...) for kind=
+        'auto': keys the autotune decision (and its persistent cache entry)
+        per call site, so same-shape projections can diverge and telemetry
+        can attribute decisions.
 
     Returns:
       (..., N), same dtype as the naive path would produce.
@@ -148,7 +164,7 @@ def matmul(
         m *= d
 
     if backend.kind == "auto":
-        backend = resolve_auto(m, k, n, jnp.result_type(x, w).name, backend)
+        backend = resolve_auto(m, k, n, jnp.result_type(x, w).name, backend, site)
 
     depth = backend.effective_depth(m, k, n) if backend.kind != "naive" else 0
     if depth == 0:
@@ -159,9 +175,22 @@ def matmul(
         # Pallas-fused path: divide/combine folded into the leaf kernel.
         from repro.kernels.strassen import ops as strassen_ops
 
+        if w_logical is not None:
+            # Pin the kernel's boundary shardings to the caller's
+            # tensor-parallel layout — same rationale as the unfused
+            # branch's per-level hooks: GSPMD loses sharding at quadrant
+            # reshapes. At depth 1 (no outer einsum levels) the boundary
+            # fully determines the pallas call's operand layout.
+            from repro.models.sharding import constrain
+
+            w_in, w_out = w_logical
+            x2 = constrain(x2, "batch", None)
+            w = constrain(w, w_in, w_out)
         out = strassen_ops.strassen_matmul_fused(
             x2, w, depth=depth, precision=backend.precision
         )
+        if w_logical is not None:
+            out = constrain(out, "batch", w_logical[1])
     else:
         from repro.models.sharding import constrain
 

@@ -9,11 +9,18 @@ the version probe happens in exactly one place.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Sequence
 
 import jax
 
-__all__ = ["make_mesh", "shard_map", "compiled_cost_analysis", "has_axis_types"]
+__all__ = [
+    "make_mesh",
+    "shard_map",
+    "compiled_cost_analysis",
+    "has_axis_types",
+    "pallas_leaf_mode",
+]
 
 # jax < 0.5 defaults to the legacy non-partitionable threefry, whose values
 # change when the consuming computation is sharded under GSPMD — a jitted
@@ -55,6 +62,39 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     from jax.experimental.shard_map import shard_map as old_sm
 
     return old_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(None)
+def pallas_leaf_mode() -> str:
+    """How the fused Strassen Pallas leaf can run on this host.
+
+    Returns one of:
+      'compiled'  — a TPU backend is present; the kernel compiles via Mosaic.
+      'interpret' — no TPU, but interpret-mode ``pallas_call`` works (CPU
+                    hosts, including host-platform multi-device test meshes).
+      'none'      — pallas is unavailable or broken in this jax build;
+                    callers must use the jnp reference path.
+
+    The probe actually executes a tiny fused kernel rather than sniffing
+    versions: autotune enumeration gates ``strassen_fused`` candidates on
+    this answer, so "the leaf compiles" must mean a real end-to-end run.
+    Cached per process (device topology is fixed after jax init).
+    """
+    try:
+        import jax.numpy as jnp
+
+        from repro.kernels.strassen.strassen import strassen1_matmul_pallas
+
+        on_tpu = jax.default_backend() == "tpu"
+        x = jnp.ones((1, 4, 128, 128), jnp.float32)
+        jax.block_until_ready(
+            strassen1_matmul_pallas(
+                x, x, block_m=128, block_n=128, block_k=128, interpret=not on_tpu
+            )
+        )
+        return "compiled" if on_tpu else "interpret"
+    except Exception:
+        return "none"
 
 
 def compiled_cost_analysis(compiled: Any) -> Dict[str, float]:

@@ -74,7 +74,7 @@ def merge_quadrants(q: jax.Array) -> jax.Array:
     return q.reshape(*lead, 2 * hr, 2 * hc)
 
 
-def divide_level(x: jax.Array, coef: jax.Array) -> jax.Array:
+def divide_level(x: jax.Array, coef: jax.Array, *, precision=None) -> jax.Array:
     """One divide level: (m, r, c) -> (m*rank, r/2, c/2).
 
     ``coef`` is the scheme's (rank, 4) a_coef or b_coef. Equivalent to
@@ -87,11 +87,11 @@ def divide_level(x: jax.Array, coef: jax.Array) -> jax.Array:
     m, r, c = x.shape
     q = split_quadrants(x)  # (m, 4, r/2, c/2)
     coef = coef.astype(x.dtype)
-    out = jnp.einsum("pq,mqij->mpij", coef, q)  # (m, rank, r/2, c/2)
+    out = jnp.einsum("pq,mqij->mpij", coef, q, precision=precision)
     return out.reshape(m * coef.shape[0], r // 2, c // 2)
 
 
-def combine_level(products: jax.Array, c_coef: jax.Array) -> jax.Array:
+def combine_level(products: jax.Array, c_coef: jax.Array, *, precision=None) -> jax.Array:
     """One combine level: (m*rank, hr, hc) -> (m, 2hr, 2hc).
 
     ``c_coef`` is the scheme's (4, rank) combine matrix. Equivalent to
@@ -104,7 +104,7 @@ def combine_level(products: jax.Array, c_coef: jax.Array) -> jax.Array:
     m = mr // rank
     prod = products.reshape(m, rank, hr, hc)
     c_coef = c_coef.astype(products.dtype)
-    quads = jnp.einsum("kp,mpij->mkij", c_coef, prod)  # (m, 4, hr, hc)
+    quads = jnp.einsum("kp,mpij->mkij", c_coef, prod, precision=precision)
     return merge_quadrants(quads)
 
 

@@ -12,7 +12,6 @@ the paper's M-index tag — as the outermost, embarrassingly parallel axis.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -14,7 +14,6 @@ r (4, H, dh, dh) per-head recurrent mixing, state (B, H, dh) x4.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -17,7 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.coefficients import STRASSEN, get_scheme
+from repro.core.coefficients import get_scheme
 from repro.core.strassen import (
     combine_level,
     divide_level,
@@ -31,7 +31,11 @@ from repro.kernels.strassen.strassen import (
     strassen1_matmul_pallas,
 )
 
-__all__ = ["strassen_matmul_stages", "strassen_matmul_fused"]
+__all__ = [
+    "strassen_matmul_stages",
+    "strassen_matmul_fused",
+    "strassen_matmul_fused_padded",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "scheme_name", "interpret"))
@@ -71,8 +75,11 @@ def strassen_matmul_fused(
 ) -> jax.Array:
     """Fused pipeline: last level runs fully in-kernel (DFS step in VMEM).
 
-    depth-1 outer levels are unrolled einsums (BFS levels, shardable);
-    the final level never materializes its 7/4x intermediates.
+    depth-1 outer levels are unrolled einsums (BFS levels, shardable) run
+    at the caller's ``precision``; the final level never materializes its
+    7/4x intermediates and always accumulates in fp32 on the MXU (the
+    kernel's preferred_element_type), which is the strongest precision the
+    leaf offers.
     """
     if depth < 1:
         raise ValueError("fused pipeline needs depth >= 1")
@@ -83,12 +90,50 @@ def strassen_matmul_fused(
 
     ta, tb = a[None], b[None]
     for _ in range(depth - 1):
-        ta = divide_level(ta, a_coef)
-        tb = divide_level(tb, b_coef)
+        ta = divide_level(ta, a_coef, precision=precision)
+        tb = divide_level(tb, b_coef, precision=precision)
     cq = strassen1_matmul_pallas(
         split_quadrants(ta), split_quadrants(tb), scheme=scheme, interpret=interpret
     )
     prod = merge_quadrants(cq)
     for _ in range(depth - 1):
-        prod = combine_level(prod, c_coef)
+        prod = combine_level(prod, c_coef, precision=precision)
     return prod[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "scheme_name", "interpret", "precision")
+)
+def strassen_matmul_fused_padded(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    depth: int = 1,
+    scheme_name: str = "strassen",
+    interpret: Optional[bool] = None,
+    precision: Optional[str] = None,
+) -> jax.Array:
+    """Fused pipeline for arbitrary (M, K) @ (K, N), odd dims included.
+
+    Zero-pads each dim up to the next multiple of 2**depth, runs
+    :func:`strassen_matmul_fused`, and slices back. Padding rows/columns
+    contribute exactly zero to every M-term (the scheme is bilinear), so
+    the unpadded block of C is exact — the same argument Stark uses for
+    its non-power-of-two Block layout.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    step = 2**depth
+    mp, kp, np_ = (-(-d // step) * step for d in (m, k, n))
+    if (mp, kp, np_) == (m, k, n):
+        return strassen_matmul_fused(
+            a, b, depth=depth, scheme_name=scheme_name,
+            interpret=interpret, precision=precision,
+        )
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = strassen_matmul_fused(
+        a_p, b_p, depth=depth, scheme_name=scheme_name,
+        interpret=interpret, precision=precision,
+    )
+    return out[:m, :n]

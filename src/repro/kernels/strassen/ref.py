@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coefficients import Scheme, STRASSEN, get_scheme
-from repro.core.strassen import merge_quadrants, split_quadrants
 
 
 def divide_ref(x: jax.Array, coef: np.ndarray) -> jax.Array:

@@ -30,13 +30,12 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, skip_reason
 from repro.core.backend import MatmulBackend
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import HW, collective_bytes, model_flops, roofline_terms
+from repro.launch.roofline import model_flops, roofline_terms
 from repro.launch.specs import serve_cell_specs, train_cell_specs
 from repro.models import model as M
 from repro.models.sharding import DEFAULT_RULES, ShardingRules, use_sharding
@@ -265,7 +264,12 @@ def main():
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
-    ap.add_argument("--backend", choices=["naive", "strassen", "winograd", "strassen_fused"])
+    ap.add_argument(
+        "--backend",
+        choices=["naive", "strassen", "winograd", "strassen_fused", "auto"],
+        help="matmul routing; 'auto' resolves per shape from the calibrated "
+        "cost model at trace time (--depth becomes the max depth)",
+    )
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--min-dim", type=int, default=2048)
     ap.add_argument("--accum", type=int, default=TRAIN_ACCUM)

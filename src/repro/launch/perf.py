@@ -15,8 +15,7 @@ Usage:
 """
 import argparse
 import dataclasses
-import json
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 from repro.core.backend import MatmulBackend
 from repro.launch import dryrun

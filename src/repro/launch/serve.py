@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.mesh import make_mesh_for

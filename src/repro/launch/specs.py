@@ -9,20 +9,19 @@ optimizer moments (same tails under m/ v/), and scan-stacked group params
 """
 from __future__ import annotations
 
-import dataclasses
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
-from repro.configs import SHAPES, Shape, get_config
+from repro.configs import Shape
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.sharding import DEFAULT_RULES, ShardingRules
 from repro.optim.adamw import AdamWConfig
-from repro.training.train_step import TrainState, init_train_state
+from repro.training.train_step import init_train_state
 
 __all__ = [
     "param_logical_axes",

@@ -14,21 +14,17 @@ CPU-scale usage (see examples/train_e2e.py for the packaged version):
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.backend import MatmulBackend
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_for_host
 from repro.launch.mesh import make_mesh_for
-from repro.launch.specs import (
-    batch_logical_axes,
-    param_logical_axes,
-    sharding_tree,
-)
+from repro.launch.specs import batch_logical_axes, param_logical_axes, sharding_tree
 from repro.models.sharding import DEFAULT_RULES, use_sharding
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.checkpoint import CheckpointManager
@@ -123,9 +119,6 @@ def train_loop(
     return state, history
 
 
-import contextlib
-
-
 @contextlib.contextmanager
 def _null():
     yield
@@ -144,7 +137,13 @@ def main():
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--mesh", action="store_true", help="build a device mesh")
     ap.add_argument("--model-parallel", type=int, default=1)
-    ap.add_argument("--backend", choices=["naive", "strassen", "winograd", "strassen_fused"], default="naive")
+    ap.add_argument(
+        "--backend",
+        choices=["naive", "strassen", "winograd", "strassen_fused", "auto"],
+        default="naive",
+        help="matmul routing; 'auto' defers to the calibrated autotune "
+        "dispatcher (--strassen-depth becomes the max depth it may pick)",
+    )
     ap.add_argument("--strassen-depth", type=int, default=1)
     ap.add_argument("--strassen-min-dim", type=int, default=1024)
     args = ap.parse_args()

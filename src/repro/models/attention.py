@@ -10,8 +10,6 @@ Three execution paths, one semantics (cross-validated in tests):
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -189,9 +187,15 @@ def _project_qkv(params, x, cfg: ModelConfig, positions):
     backend = cfg.matmul_backend
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = linear(params["wq"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, h, hd)
-    k = linear(params["wk"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, hkv, hd)
-    v = linear(params["wv"], x, backend, w_logical=("fsdp", "heads")).reshape(b, s, hkv, hd)
+    q = linear(
+        params["wq"], x, backend, w_logical=("fsdp", "heads"), site="attn.wq"
+    ).reshape(b, s, h, hd)
+    k = linear(
+        params["wk"], x, backend, w_logical=("fsdp", "heads"), site="attn.wk"
+    ).reshape(b, s, hkv, hd)
+    v = linear(
+        params["wv"], x, backend, w_logical=("fsdp", "heads"), site="attn.wv"
+    ).reshape(b, s, hkv, hd)
     q = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)
     k = jnp.moveaxis(k, 2, 1)
     v = jnp.moveaxis(v, 2, 1)
@@ -275,7 +279,10 @@ def attention_block(
             new_cache = {"k": kc, "v": vc}
 
     out = jnp.moveaxis(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
-    out = linear(params["wo"], out, cfg.matmul_backend, w_logical=("heads", "fsdp"))
+    out = linear(
+        params["wo"], out, cfg.matmul_backend, w_logical=("heads", "fsdp"),
+        site="attn.wo",
+    )
     return constrain(out, "batch", "seq", "d_model"), new_cache
 
 
@@ -292,12 +299,14 @@ def cross_attention_block(
     """Decoder cross-attention against precomputed encoder K/V (whisper)."""
     b, s, _ = x.shape
     backend = cfg.matmul_backend
-    q = linear(params["wq"], x, backend).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    q = linear(params["wq"], x, backend, site="xattn.wq").reshape(
+        b, s, cfg.n_heads, cfg.head_dim
+    )
     q = jnp.moveaxis(q, 1, 2)  # (B, H, S, hd)
     k, v = enc_kv  # (B, Hkv, S_enc, hd)
     out = chunked_attention(q, k, v, causal=False)
     out = jnp.moveaxis(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
-    return linear(params["wo"], out, backend)
+    return linear(params["wo"], out, backend, site="xattn.wo")
 
 
 def encode_cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
@@ -305,6 +314,6 @@ def encode_cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
     backend = cfg.matmul_backend
     b, s, _ = enc_out.shape
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
-    k = linear(params["wk"], enc_out, backend).reshape(b, s, hkv, hd)
-    v = linear(params["wv"], enc_out, backend).reshape(b, s, hkv, hd)
+    k = linear(params["wk"], enc_out, backend, site="xattn.wk").reshape(b, s, hkv, hd)
+    v = linear(params["wv"], enc_out, backend, site="xattn.wv").reshape(b, s, hkv, hd)
     return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)

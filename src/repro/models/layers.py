@@ -37,19 +37,21 @@ def linear(
     x: jax.Array,
     backend: MatmulBackend = NAIVE_BACKEND,
     w_logical=None,
+    site: Optional[str] = None,
 ) -> jax.Array:
     """y = x @ w (+ b), with w (d_in, *out_dims) flattened for routing.
 
     The backend decides per-shape whether this projection runs as a naive
     XLA matmul or through the Strassen pipeline (paper integration point).
     w_logical (in, out) logical dim names keep the Strassen levels pinned
-    to the layer's tensor-parallel layout.
+    to the layer's tensor-parallel layout. ``site`` tags the projection for
+    per-call-site autotune cache keys and decision telemetry.
     """
     w = params["w"]
     d_in = w.shape[0]
     out_dims = w.shape[1:]
     w2 = w.reshape(d_in, -1)
-    y = backend_matmul(x, w2, backend, w_logical=w_logical)
+    y = backend_matmul(x, w2, backend, w_logical=w_logical, site=site)
     y = y.reshape(*x.shape[:-1], *out_dims)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.layers import init_linear, linear
@@ -33,13 +32,15 @@ def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
 def mlp_block(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     backend = cfg.matmul_backend
     act = _ACTS[cfg.act]
-    up = linear(params["up"], x, backend, w_logical=("fsdp", "d_ff"))
+    up = linear(params["up"], x, backend, w_logical=("fsdp", "d_ff"), site="mlp.up")
     up = constrain(up, "batch", "seq", "d_ff")
     if "gate" in params:
-        gate = linear(params["gate"], x, backend, w_logical=("fsdp", "d_ff"))
+        gate = linear(
+            params["gate"], x, backend, w_logical=("fsdp", "d_ff"), site="mlp.gate"
+        )
         gate = constrain(gate, "batch", "seq", "d_ff")
         h = act(gate) * up
     else:
         h = act(up)
-    out = linear(params["down"], h, backend, w_logical=("d_ff", "fsdp"))
+    out = linear(params["down"], h, backend, w_logical=("d_ff", "fsdp"), site="mlp.down")
     return constrain(out, "batch", "seq", "d_model")

@@ -5,7 +5,7 @@ these five functions; the family dispatch lives here and nowhere else.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -101,8 +101,10 @@ def rglru_block(
     """Griffin recurrent block: gelu gate branch x (conv -> RG-LRU) branch."""
     b, s, d = x.shape
     backend = cfg.matmul_backend
-    gate = jax.nn.gelu(linear(params["in_gate"], x, backend), approximate=True)
-    rec_in = linear(params["in_rec"], x, backend)
+    gate = jax.nn.gelu(
+        linear(params["in_gate"], x, backend, site="rglru.in_gate"), approximate=True
+    )
+    rec_in = linear(params["in_rec"], x, backend, site="rglru.in_rec")
     rec_in = constrain(rec_in, "batch", "seq", "d_ff")
 
     tail = state["conv"] if state is not None else None
@@ -111,7 +113,7 @@ def rglru_block(
     h, h_last = _rglru_scan(conv_out, params, cfg, h0)
 
     merged = gate * h.astype(x.dtype)
-    out = linear(params["out"], merged, backend)
+    out = linear(params["out"], merged, backend, site="rglru.out")
     out = constrain(out, "batch", "seq", "d_model")
     new_state = None
     if state is not None:

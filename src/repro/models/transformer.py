@@ -8,19 +8,14 @@ Per-group remat (jax.checkpoint) implements activation checkpointing.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import (
-    attention_block,
-    init_attention,
-    init_kv_cache,
-)
+from repro.models.attention import attention_block, init_attention, init_kv_cache
 from repro.models.config import ModelConfig
-from repro.models.layers import embed, init_linear, layernorm, rmsnorm, unembed
+from repro.models.layers import embed, layernorm, rmsnorm, unembed
 from repro.models.mlp import init_mlp, mlp_block
 from repro.models.moe import init_moe, moe_block
 from repro.models.rglru import init_rglru, init_rglru_state, rglru_block

@@ -181,9 +181,18 @@ def mlstm_block(
     dk = cfg.mlstm_qk_dim // h
 
     dv_h = cfg.mlstm_v_dim // h
-    q = linear(params["wq"], x, backend).reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
-    k = linear(params["wk"], x, backend).reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
-    v = linear(params["wv"], x, backend).reshape(b, s, h, dv_h).astype(jnp.float32)
+    q = (
+        linear(params["wq"], x, backend, site="mlstm.wq")
+        .reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
+    )
+    k = (
+        linear(params["wk"], x, backend, site="mlstm.wk")
+        .reshape(b, s, h, dk).astype(jnp.float32) * dk**-0.5
+    )
+    v = (
+        linear(params["wv"], x, backend, site="mlstm.wv")
+        .reshape(b, s, h, dv_h).astype(jnp.float32)
+    )
     i_pre = linear(params["wi"], x.astype(jnp.float32))
     f_pre = linear(params["wf"], x.astype(jnp.float32))
     o_gate = jax.nn.sigmoid(
@@ -206,7 +215,10 @@ def mlstm_block(
         new_state, hs = jax.lax.scan(_mlstm_step, st, xs)  # (S, B, H, dv_h)
         hs = jnp.moveaxis(hs, 0, 1)  # (B, S, H, dv_h)
     hs = hs * o_gate
-    out = linear(params["out"], hs.reshape(b, s, cfg.mlstm_v_dim).astype(x.dtype), backend)
+    out = linear(
+        params["out"], hs.reshape(b, s, cfg.mlstm_v_dim).astype(x.dtype), backend,
+        site="mlstm.out",
+    )
     out = constrain(out, "batch", "seq", "d_model")
     return out, (new_state if state is not None else None)
 

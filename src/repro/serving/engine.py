@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.frontends import make_stub_positions
@@ -37,8 +38,6 @@ class ServeConfig:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = ServeConfig()):
         if cfg.matmul_backend.kind == "auto":
-            from repro.core import autotune
-
             if serve_cfg.tuning_cache and not cfg.matmul_backend.tuning_cache:
                 cfg = dataclasses.replace(
                     cfg,
@@ -130,4 +129,15 @@ class Engine:
             "generated": float(tokens.shape[1]),
             "cache_pos": float(cache["pos"]),
         }
+        # Autotune decision telemetry: how many matmul resolutions this
+        # process served from the cache vs decided fresh. Full per-decision
+        # records (site, kind, predicted-vs-measured) via autotune_stats().
+        tel = autotune.get_telemetry()
+        stats["autotune_cache_hits"] = float(tel.cache_hits)
+        stats["autotune_cache_misses"] = float(tel.cache_misses)
         return tokens, stats
+
+    def autotune_stats(self) -> Dict:
+        """Full autotune telemetry snapshot: cache hit/miss counters, chosen
+        kind per trace, and predicted-vs-measured seconds per decision."""
+        return autotune.get_telemetry().snapshot()

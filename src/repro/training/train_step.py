@@ -8,9 +8,7 @@ standard large-scale recipe; combined with per-group remat in the model).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ try:
 except ImportError:  # fall back to the vendored grid shim
     from _propshim import given, settings, strategies as st
 
-from repro.core import autotune
+from repro.core import autotune, compat
 from repro.core.autotune import (
     Calibration,
     Candidate,
@@ -130,7 +130,8 @@ def test_larger_shapes_prefer_strassen_smaller_prefer_naive():
     small = autotune.autotune(256, 256, 256, calibration=CALIB, min_dim=1024)
     large = autotune.autotune(8192, 8192, 8192, calibration=CALIB, min_dim=1024)
     assert small.kind == "naive"
-    assert large.kind in ("strassen", "winograd") and large.depth >= 1
+    assert large.kind in ("strassen", "winograd", "strassen_fused")
+    assert large.depth >= 1
 
 
 # ------------------------------------------------------------------- cache
@@ -225,6 +226,218 @@ def test_predictions_positive_and_naive_flops_exact():
         assert predict_seconds(c, 2048, 2048, 2048, CALIB) > 0.0
 
 
+# -------------------------------------------------- fused Pallas candidate
+def test_fused_enumerates_when_leaf_runs():
+    """strassen_fused appears at every usable depth on hosts where the
+    Pallas leaf runs (interpret mode on this CPU suite)."""
+    assert compat.pallas_leaf_mode() in ("compiled", "interpret")
+    cands = enumerate_candidates(4096, 4096, 4096, min_dim=1, max_depth=2)
+    fused = {c.depth for c in cands if c.kind == "strassen_fused"}
+    assert fused == {1, 2}
+    assert all(c.scheme == "strassen" for c in cands if c.kind == "strassen_fused")
+
+
+def test_fused_not_enumerated_without_pallas(monkeypatch):
+    monkeypatch.setattr(compat, "pallas_leaf_mode", lambda: "none")
+    cands = enumerate_candidates(4096, 4096, 4096, min_dim=1, max_depth=2)
+    assert not any(c.kind == "strassen_fused" for c in cands)
+
+
+def test_fused_selected_at_scale_and_executes():
+    """Under the fixed constants the fused pipeline wins once dims clear
+    the crossover; the candidate executes exactly (checked at a small
+    shape — interpret-mode Pallas at 8192 would dominate suite time)."""
+    d = autotune.autotune(8192, 8192, 8192, calibration=CALIB, min_dim=1024)
+    assert d.kind == "strassen_fused" and d.depth >= 1
+    small = Candidate(kind="strassen_fused", scheme="strassen", depth=d.depth)
+    x, w = _rand((256, 256)), _rand((256, 256))
+    got = autotune.execute(small, x, w)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_resolve_auto_routes_through_fused_backend(monkeypatch):
+    """A fused decision resolves to a kind='strassen_fused' backend and the
+    matmul wrapper routes through the Pallas pipeline."""
+    be = _auto_backend(min_dim=1)
+    decision = Decision(
+        kind="strassen_fused", scheme="strassen", depth=1, predicted_s=1e-3
+    )
+    monkeypatch.setattr(autotune, "autotune", lambda *a, **k: decision)
+    resolved = resolve_auto(256, 256, 256, "float32", be)
+    assert resolved.kind == "strassen_fused" and resolved.depth == 1
+    x, w = _rand((256, 256)), _rand((256, 256))
+    got = matmul(x, w, be)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_fused_predicted_cheaper_than_unfused_strassen():
+    """The fused leaf skips the last level's materialized M-terms, so at
+    equal depth its predicted cost must be strictly below plain BFS."""
+    for depth in (1, 2, 3):
+        fused = Candidate(kind="strassen_fused", scheme="strassen", depth=depth)
+        plain = Candidate(kind="strassen", scheme="strassen", depth=depth)
+        n = 8192
+        assert predict_seconds(fused, n, n, n, CALIB) < predict_seconds(
+            plain, n, n, n, CALIB
+        )
+
+
+# ------------------------------------------------------- t_coll cost model
+def test_t_coll_monotonicity():
+    """Mesh-strategy predictions are strictly increasing in t_coll; local
+    candidates never touch the interconnect constant."""
+    n, dc = 4096, 8
+    mesh_kinds = [
+        Candidate(kind="strassen_bfs_sharded", scheme="strassen", depth=2),
+        Candidate(kind="strassen_2d", scheme="strassen", depth=2),
+        Candidate(kind="strassen_fused_sharded", scheme="strassen", depth=2),
+        Candidate(kind="naive"),
+    ]
+    local_kinds = [
+        Candidate(kind="strassen", scheme="strassen", depth=2),
+        Candidate(kind="strassen_fused", scheme="strassen", depth=2),
+    ]
+    t_colls = [1e-9, 4e-9, 1.6e-8, 6.4e-8]
+    for cand in mesh_kinds:
+        costs = [
+            predict_seconds(
+                cand, n, n, n,
+                dataclasses.replace(CALIB, t_coll=tc, device_count=dc),
+                device_count=dc,
+            )
+            for tc in t_colls
+        ]
+        assert all(a < b for a, b in zip(costs, costs[1:])), (cand.kind, costs)
+    for cand in local_kinds:
+        costs = {
+            predict_seconds(
+                cand, n, n, n,
+                dataclasses.replace(CALIB, t_coll=tc, device_count=dc),
+                device_count=dc,
+            )
+            for tc in t_colls
+        }
+        assert len(costs) == 1, (cand.kind, costs)
+
+
+def test_t_coll_zero_falls_back_to_t_elem():
+    """Pre-t_coll calibrations (t_coll=0) must reproduce the old model."""
+    cand = Candidate(kind="strassen_bfs_sharded", scheme="strassen", depth=1)
+    base = predict_seconds(cand, 2048, 2048, 2048, CALIB, device_count=8)
+    explicit = predict_seconds(
+        cand, 2048, 2048, 2048,
+        dataclasses.replace(CALIB, t_coll=CALIB.t_elem), device_count=8,
+    )
+    assert base == pytest.approx(explicit)
+
+
+def test_calibrate_collective_positive_on_multidevice():
+    assert jax.device_count() >= 2  # conftest forces 8 host devices
+    t_coll = autotune.calibrate_collective(sample_dim=64, repeats=1)
+    assert t_coll > 0.0
+
+
+# ------------------------------------------------------- call-site caching
+def test_cache_key_site_tag_separates_and_composes():
+    kw = dict(device_kind="cpu", device_count=1, schemes=("strassen",),
+              min_dim=1024, max_depth=2)
+    k_plain = cache_key(512, 512, 512, jnp.float32, **kw)
+    k_q = cache_key(512, 512, 512, jnp.float32, site="attn.wq", **kw)
+    k_up = cache_key(512, 512, 512, jnp.float32, site="mlp.up", **kw)
+    assert len({k_plain, k_q, k_up}) == 3
+    assert k_q.startswith(k_plain)
+
+
+def test_site_lookup_falls_back_to_generic_in_predicted_mode():
+    cache = TuningCache()
+    d1 = autotune.autotune(4096, 4096, 4096, calibration=CALIB, cache=cache)
+    # the generic entry answers a tagged lookup without a new resolution
+    d2 = autotune.autotune(
+        4096, 4096, 4096, calibration=CALIB, cache=cache, site="attn.wq"
+    )
+    assert d2.source == "cache"
+    assert (d2.kind, d2.depth) == (d1.kind, d1.depth)
+    assert len(cache.entries) == 1
+
+
+def test_measured_site_decisions_diverge(monkeypatch):
+    """Under measure mode, two sites of the same shape hold separate
+    entries — the point of call-site keys."""
+    cache = TuningCache()
+    times = iter([3.0, 1.0, 2.0, 1.0, 2.0, 3.0])  # distinct winners per site
+
+    monkeypatch.setattr(
+        autotune, "measure_seconds", lambda *a, **k: next(times)
+    )
+    d_q = autotune.autotune(
+        4096, 4096, 4096, calibration=CALIB, cache=cache,
+        measure=True, top_k=3, site="attn.wq",
+    )
+    d_up = autotune.autotune(
+        4096, 4096, 4096, calibration=CALIB, cache=cache,
+        measure=True, top_k=3, site="mlp.up",
+    )
+    assert len(cache.entries) == 2
+    assert (d_q.kind, d_q.depth) != (d_up.kind, d_up.depth)
+
+
+def test_resolve_auto_site_is_part_of_memo_key(monkeypatch):
+    be = _auto_backend(min_dim=1)
+    calls = []
+    real = autotune.autotune
+
+    def counting(*a, **k):
+        calls.append(k.get("site"))
+        return real(*a, **k)
+
+    monkeypatch.setattr(autotune, "autotune", counting)
+    x, w = _rand((64, 64)), _rand((64, 64))
+    matmul(x, w, be, site="attn.wq")
+    matmul(x, w, be, site="attn.wq")  # lru hit
+    matmul(x, w, be, site="mlp.up")  # new site: new resolution
+    assert calls == ["attn.wq", "mlp.up"]
+
+
+# ------------------------------------------------------------- telemetry
+def test_telemetry_records_hits_misses_and_kinds():
+    tel = autotune.get_telemetry()
+    tel.reset()
+    cache = TuningCache()
+    autotune.autotune(4096, 4096, 4096, calibration=CALIB, cache=cache)
+    autotune.autotune(4096, 4096, 4096, calibration=CALIB, cache=cache)
+    snap = tel.snapshot()
+    assert snap["cache_misses"] == 1 and snap["cache_hits"] == 1
+    assert sum(snap["kinds"].values()) == 2
+    first, second = snap["decisions"]
+    assert first["cache_hit"] is False and second["cache_hit"] is True
+    assert first["kind"] == second["kind"]
+    assert first["predicted_s"] > 0.0
+    tel.reset()
+    assert tel.snapshot()["cache_hits"] == 0 and not tel.snapshot()["decisions"]
+
+
+def test_warm_for_model_emits_site_tagged_telemetry():
+    from repro.configs import get_smoke_config
+
+    tel = autotune.get_telemetry()
+    tel.reset()
+    cfg = get_smoke_config("phi4_mini_3_8b")
+    cfg = dataclasses.replace(cfg, matmul_autotune=True)
+    n = autotune.warm_for_model(cfg, tokens=(1, 64))
+    assert n > 0
+    sites = {e.site for e in tel.events}
+    assert {"attn.wq", "mlp.up"} <= sites
+    assert None not in sites
+    # predicted-mode decisions dedupe to shape-only entries: equal-shape
+    # sites share one cache row instead of storing identical copies
+    cache = autotune.process_cache(cfg.matmul_backend.tuning_cache)
+    assert cache.entries and not any("|site:" in k for k in cache.entries)
+
+
 # ---------------------------------------------------------- mesh candidates
 def test_mesh_enumeration_and_dispatch():
     """On a (data, model) mesh the registered strategies become candidates
@@ -236,13 +449,67 @@ def test_mesh_enumeration_and_dispatch():
     mesh = make_mesh((jax.device_count() // 2, 2), ("data", "model"))
     cands = enumerate_candidates(512, 512, 512, min_dim=64, max_depth=2, mesh=mesh)
     kinds = {c.kind for c in cands}
-    assert {"naive", "strassen", "strassen_bfs_sharded", "strassen_2d"} <= kinds
+    assert {
+        "naive",
+        "strassen",
+        "strassen_bfs_sharded",
+        "strassen_2d",
+        "strassen_fused_sharded",
+    } <= kinds
 
     d = autotune.autotune(
         512, 512, 512, min_dim=64, max_depth=1, mesh=mesh,
         calibration=dataclasses.replace(CALIB, device_count=jax.device_count()),
     )
     x, w = _rand((512, 512)), _rand((512, 512))
+    got = autotune.execute(d.candidate, x, w, mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_fused_sharded_strategy_matches_matmul():
+    """The shard_map'd Pallas fused leaf computes the exact product on the
+    conftest host mesh (interpret mode on CPU), including shapes that need
+    the M-stripe padding path."""
+    from repro.core.compat import make_mesh
+    from repro.core.distributed import strassen_fused_sharded
+
+    if jax.device_count() < 2:
+        pytest.skip("needs the conftest multi-device host platform")
+    mesh = make_mesh((jax.device_count() // 2, 2), ("data", "model"))
+    for (m, k, n) in [(256, 128, 192), (200, 200, 200)]:
+        x, w = _rand((m, k)), _rand((k, n))
+        for depth in (1, 2):
+            got = strassen_fused_sharded(x, w, mesh=mesh, depth=depth)
+            assert got.shape == (m, n)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+            )
+    cand = Candidate(kind="strassen_fused_sharded", scheme="strassen", depth=1)
+    x, w = _rand((256, 128)), _rand((128, 192))
+    got = autotune.execute(cand, x, w, mesh=mesh)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_mesh_selected_candidate_executes_on_awkward_shape():
+    """The reviewer repro: a mesh decision at a shape that is divisible by
+    2**depth but not by (row shards * 2**depth) must still execute."""
+    from repro.core.compat import make_mesh
+
+    if jax.device_count() < 2:
+        pytest.skip("needs the conftest multi-device host platform")
+    mesh = make_mesh((jax.device_count() // 2, 2), ("data", "model"))
+    calib = dataclasses.replace(
+        CALIB, t_flop=1e-9, t_elem=1e-12, t_coll=1e-12,
+        device_count=jax.device_count(),
+    )
+    d = autotune.autotune(
+        200, 200, 200, min_dim=1, max_depth=2, mesh=mesh, calibration=calib
+    )
+    x, w = _rand((200, 200)), _rand((200, 200))
     got = autotune.execute(d.candidate, x, w, mesh=mesh)
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(x @ w), atol=3e-3, rtol=3e-3

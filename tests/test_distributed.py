@@ -3,13 +3,11 @@
 Device count is locked at jax init, so these run in SUBPROCESSES with
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

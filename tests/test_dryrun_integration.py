@@ -4,7 +4,6 @@ Runs in a subprocess (device count locks at jax init) with 512 placeholder
 devices — exactly what repro.launch.dryrun does — and asserts the cell
 lowers, compiles, and yields coherent roofline artifacts.
 """
-import json
 import os
 import subprocess
 import sys

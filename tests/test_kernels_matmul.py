@@ -1,5 +1,4 @@
 """Shape/dtype sweeps for the matmul Pallas kernels vs the pure-jnp oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -3,9 +3,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.coefficients import STRASSEN, WINOGRAD, get_scheme
+from repro.core.coefficients import get_scheme
 from repro.core.strassen import merge_quadrants, split_quadrants
-from repro.kernels.strassen.ops import strassen_matmul_fused, strassen_matmul_stages
+from repro.kernels.strassen.ops import (
+    strassen_matmul_fused,
+    strassen_matmul_fused_padded,
+    strassen_matmul_stages,
+)
 from repro.kernels.strassen.ref import (
     combine_ref,
     divide_ref,
@@ -66,6 +70,43 @@ def test_full_pipelines_vs_plain_matmul(depth, pipeline):
     got = pipeline(a, b, depth=depth)
     want = strassen1_full_ref(a, b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("depth", [1, 2])
+def test_fused_vs_ref_dtypes(depth, dtype):
+    """Fused leaf vs the pure-jnp oracle across dtypes (bf16 accumulates in
+    fp32 inside the kernel, so the oracle's fp32 pipeline is the target)."""
+    a, b = _rand((128, 96), dtype), _rand((96, 64), dtype)
+    got = strassen_matmul_fused(a, b, depth=depth)
+    want = strassen1_full_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [(33, 65, 17), (100, 60, 36), (127, 129, 64)])
+def test_fused_padded_odd_shapes(m, k, n, dtype):
+    """Odd/non-divisible dims route through the zero-padded fused pipeline
+    and stay exact on the unpadded block."""
+    a, b = _rand((m, k), dtype), _rand((k, n), dtype)
+    for depth in (1, 2):
+        got = strassen_matmul_fused_padded(a, b, depth=depth)
+        assert got.shape == (m, n) and got.dtype == a.dtype
+        want = strassen1_full_ref(a, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=TOL[dtype], rtol=TOL[dtype],
+        )
+
+
+def test_fused_padded_noop_on_divisible_shapes():
+    a, b = _rand((64, 64)), _rand((64, 64))
+    got = strassen_matmul_fused_padded(a, b, depth=2)
+    want = strassen_matmul_fused(a, b, depth=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
 
 
 def test_fused_winograd_scheme():

@@ -1,7 +1,6 @@
 """Launch layer: HLO analyzer, sharding specs, roofline parsing, mesh plan."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo

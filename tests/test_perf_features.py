@@ -12,7 +12,7 @@ except ImportError:  # fall back to the vendored grid shim
 
 from repro.configs import get_smoke_config
 from repro.models import model as M
-from repro.models.xlstm import init_mlstm_state, mlstm_chunkwise, _mlstm_step
+from repro.models.xlstm import mlstm_chunkwise, _mlstm_step
 
 RNG = np.random.default_rng(21)
 

@@ -1,5 +1,4 @@
 """Core Strassen: scheme identities, pipelines, tags, cost model, hypothesis."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,7 +12,6 @@ from repro.core import (
     STRASSEN,
     WINOGRAD,
     MatmulBackend,
-    combine_level,
     divide_level,
     leaf_count,
     matmul,

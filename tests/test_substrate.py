@@ -12,8 +12,7 @@ except ImportError:  # fall back to the vendored grid shim
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_for_host
-from repro.models import model as M
-from repro.optim.adamw import AdamWConfig, apply_updates, cosine_schedule, init_opt_state
+from repro.optim.adamw import AdamWConfig, cosine_schedule
 from repro.runtime.checkpoint import CheckpointManager, load_pytree, save_pytree
 from repro.runtime.elastic import (
     ElasticError,
