@@ -62,7 +62,7 @@ def _make_mesh():
 
 
 def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
-          out_path="autotune_sweep.json", calibration=None):
+          out_path="autotune_sweep.json", calibration=None, oot_budget=None):
     from benchmarks.common import emit, rand, time_fn
     from repro.core import autotune
 
@@ -73,7 +73,8 @@ def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
     rows = []
     for n in sizes:
         cands = autotune.enumerate_candidates(
-            n, n, n, max_depth=max_depth, min_dim=min_dim, mesh=mesh
+            n, n, n, max_depth=max_depth, min_dim=min_dim, mesh=mesh,
+            oot_budget=oot_budget,
         )
 
         def label_of(kind, scheme, depth):
@@ -83,16 +84,22 @@ def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
                 return f"{kind}@d{depth}"
             return f"{kind}[{scheme}]@d{depth}"  # mesh strategy per scheme
 
-        predictions = {
-            label_of(c.kind, c.scheme, c.depth): autotune.predict_seconds(
+        predictions = {}
+        predicted_terms = {}
+        for c in cands:
+            label = label_of(c.kind, c.scheme, c.depth)
+            terms = autotune.predict_cost_terms(
                 c, n, n, n, calib, device_count=device_count
             )
-            for c in cands
-        }
+            predictions[label] = sum(terms.values())
+            # The per-constant split (t_flop/t_elem/t_coll/t_h2d seconds)
+            # is the evidence column: for strassen_oot it shows the
+            # host<->device staging term next to compute and traffic.
+            predicted_terms[label] = {k: round(v, 6) for k, v in terms.items()}
         decision = autotune.autotune(
             n, n, n,
             min_dim=min_dim, max_depth=max_depth, mesh=mesh,
-            calibration=calib, measure=measure,
+            calibration=calib, measure=measure, oot_budget=oot_budget,
         )
 
         a, b = rand((n, n)), rand((n, n))
@@ -100,7 +107,12 @@ def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
         want = naive_fn(a, b)
         t_naive = time_fn(naive_fn, a, b, warmup=1, iters=2)
         sel = decision.candidate
-        sel_fn = jax.jit(lambda x, y: autotune.execute(sel, x, y, mesh=mesh))
+        if sel.kind == autotune.OOT_KIND:
+            # Host-resident pipeline: eager by construction (no jit).
+            def sel_fn(x, y):
+                return autotune.execute(sel, x, y, oot_budget=oot_budget)
+        else:
+            sel_fn = jax.jit(lambda x, y: autotune.execute(sel, x, y, mesh=mesh))
         got = sel_fn(a, b)
         t_sel = time_fn(sel_fn, a, b, warmup=1, iters=2)
         scale = float(jnp.max(jnp.abs(want))) or 1.0
@@ -112,6 +124,7 @@ def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
             "selected": label,
             "source": decision.source,
             "predicted_s": {k: round(v, 6) for k, v in sorted(predictions.items())},
+            "predicted_terms": dict(sorted(predicted_terms.items())),
             "predicted_selected_s": decision.predicted_s,
             "measured_selected_s": t_sel,
             "measured_naive_s": t_naive,
@@ -129,6 +142,7 @@ def sweep(sizes=(256, 2048, 4096), *, min_dim=1024, max_depth=2, measure=False,
         "calibration_source": "pinned" if calibration else "measured",
         "min_dim": min_dim,
         "max_depth": max_depth,
+        "oot_budget": oot_budget,
         "rows": rows,
         # Decision telemetry for the run: cache hit/miss counters, chosen
         # kind per resolution, predicted-vs-measured seconds per decision.
@@ -165,6 +179,7 @@ def smoke_calibration():
         t_flop=1e-11,
         t_elem=1e-9,
         t_coll=4e-9,
+        t_h2d=2e-9,
         device_kind=dev.platform,
         device_count=jax.device_count(),
     )
@@ -185,18 +200,31 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: small dims, and fail if the largest dim "
                          "selects naive or any correctness check fails")
+    ap.add_argument("--oot-budget-mb", type=float, default=0.0,
+                    help="device-memory budget enabling the strassen_oot "
+                         "out-of-core candidate family (0 = off); its "
+                         "predicted t_h2d term lands in predicted_terms")
     ap.add_argument("--out", default="autotune_sweep.json")
     args = ap.parse_args()
     calibration = None
+    oot_budget = int(args.oot_budget_mb * 2**20) or None
     if args.smoke:
         sizes, min_dim = SMOKE_SIZES, SMOKE_MIN_DIM
         calibration = smoke_calibration()
+        # Budget the oot family into the smoke table too, so the t_h2d
+        # column is exercised on every CI run. 8 MiB: large enough that
+        # the dense working set fits at every smoke size (3*512^2*4 =
+        # 3 MiB), so oot rows appear as *candidates* without the
+        # infeasibility filter hijacking the mesh-crossover story the
+        # naive-regression gate asserts.
+        oot_budget = oot_budget or (8 << 20)
     else:
         sizes = tuple(int(s) for s in args.sizes.split(","))
         min_dim = args.min_dim
     payload = sweep(
         sizes, min_dim=min_dim, max_depth=args.max_depth,
         measure=args.measure, out_path=args.out, calibration=calibration,
+        oot_budget=oot_budget,
     )
     for row in payload["rows"]:
         print(f"# n={row['n']:6d} -> {row['selected']:24s} "

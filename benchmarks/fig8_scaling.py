@@ -1,0 +1,212 @@
+"""Paper Fig. 8 at scale: out-of-core wall clock vs matrix size.
+
+The paper's headline experiment multiplies matrices (up to 16384^2) that
+no single executor could hold; Stark's tagged-block RDD streams them
+through the cluster. This benchmark reproduces that curve on one host:
+operands live in a host block store and :mod:`repro.blocks.scheduler`
+stages the 7^q leaf waves through a *capped device-memory budget* — so a
+size "fits on device" only if 3n^2 operand/product bytes do, and the
+table deliberately includes sizes that do not.
+
+Full run (paper-scale; hours on CPU hosts, real-TPU recommended):
+
+    PYTHONPATH=src python benchmarks/fig8_scaling.py \
+        [--sizes 2048,4096,8192,16384] [--budget-mb 64] [--store memmap]
+
+CI smoke mode — bf16, an artificially small budget that forces >= 2
+staging waves, and a parity gate:
+
+    PYTHONPATH=src python benchmarks/fig8_scaling.py --smoke
+
+``--smoke`` EXITS NON-ZERO if any size's out-of-core result drifts more
+than 1e-2 from the dense bf16 matmul, if the staging plan degenerates to
+a single wave (the budget failed to force out-of-core behavior), or if
+no size exceeds the device budget.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)  # `benchmarks` package when run as a script
+
+import argparse
+import json
+import time
+
+
+def _dense_seconds(a, b, repeats: int = 2):
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x, y: jnp.matmul(x, y))
+    da, db = jnp.asarray(a), jnp.asarray(b)
+    out = jax.block_until_ready(fn(da, db))  # warmup/compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(da, db))
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def sweep(
+    sizes=(2048, 4096),
+    *,
+    budget_bytes=64 << 20,
+    dtype="float32",
+    store="dict",
+    depth=0,
+    parity_max=4096,
+    out_path="fig8_scaling.json",
+):
+    """Run the wall-clock-vs-size table; returns the JSON payload."""
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.blocks.scheduler import min_depth_for_budget, strassen_oot_matmul
+    from repro.core.backend import MatmulBackend
+
+    if dtype == "bfloat16":
+        import ml_dtypes
+
+        np_dtype = np.dtype(ml_dtypes.bfloat16)
+        tol = 1e-2
+    else:
+        np_dtype = np.dtype(dtype)
+        tol = 2e-3
+
+    backend = MatmulBackend(kind="auto", depth=2)
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        a = rng.standard_normal((n, n)).astype(np_dtype)
+        b = rng.standard_normal((n, n)).astype(np_dtype)
+        # "Fits on device" the way a dense multiply would need it:
+        # both operands plus the product resident at once.
+        fits = 3 * a.nbytes <= budget_bytes
+        d = depth or min_depth_for_budget(n, n, n, max(budget_bytes // 2, 1), np_dtype)
+        out, stats = strassen_oot_matmul(
+            a, b, depth=d, budget_bytes=budget_bytes, backend=backend, store=store
+        )
+        row = {
+            "n": n,
+            "dtype": np_dtype.name,
+            "depth": d,
+            "leaves": stats.leaves,
+            "waves": stats.waves,
+            "wave_size": stats.wave_size,
+            "fits_on_device": fits,
+            "budget_bytes": budget_bytes,
+            "peak_device_bytes": stats.peak_device_bytes,
+            "operand_bytes": a.nbytes,
+            "oot_s": stats.total_s,
+            "divide_s": stats.divide_s,
+            "leaf_s": stats.leaf_s,
+            "combine_s": stats.combine_s,
+            "h2d_bytes": stats.h2d_bytes,
+            "dense_s": None,
+            "rel_err": None,
+            "ok": None,
+        }
+        if n <= parity_max:
+            want, dense_s = _dense_seconds(a, b)
+            want = np.asarray(want).astype(np.float32)
+            scale = float(np.abs(want).max()) or 1.0
+            err = float(np.abs(out.astype(np.float32) - want).max() / scale)
+            row["dense_s"] = dense_s
+            row["rel_err"] = err
+            row["ok"] = err < tol
+        rows.append(row)
+        emit(
+            f"fig8s/{np_dtype.name}/n{n}", stats.total_s,
+            f"depth={d};waves={stats.waves};fits={fits};"
+            f"err={row['rel_err'] if row['rel_err'] is not None else 'n/a'}",
+        )
+
+    payload = {
+        "budget_bytes": budget_bytes,
+        "dtype": np_dtype.name,
+        "store": store,
+        "tolerance": tol,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path}", flush=True)
+    return payload
+
+
+def run():
+    """benchmarks.run entry point: a small f32 table with parity checks."""
+    sweep(sizes=(256, 512), budget_bytes=1 << 20, out_path="fig8_scaling.json")
+
+
+# Smoke-mode constants: bf16 sizes small enough for a CI runner; the
+# budget (i) is smaller than one 256^2 bf16 operand (131072 B) — so the
+# largest size cannot fit on device — and (ii) forces every size through
+# >= 2 staging waves at the auto-chosen depth.
+SMOKE_SIZES = (192, 256)
+SMOKE_BUDGET = 96 << 10
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="2048,4096,8192,16384")
+    ap.add_argument("--budget-mb", type=float, default=64.0)
+    ap.add_argument("--dtype", choices=["float32", "bfloat16"], default="float32")
+    ap.add_argument("--store", choices=["dict", "arena", "memmap"], default="dict")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="0 = shallowest depth that fits the budget per size")
+    ap.add_argument("--parity-max", type=int, default=4096,
+                    help="largest n to verify against the dense matmul")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny bf16 sizes under a budget that "
+                         "forces >= 2 staging waves; non-zero exit on "
+                         "parity drift > 1e-2 or a degenerate plan")
+    ap.add_argument("--out", default="fig8_scaling.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        payload = sweep(
+            SMOKE_SIZES, budget_bytes=SMOKE_BUDGET, dtype="bfloat16",
+            store=args.store, parity_max=max(SMOKE_SIZES), out_path=args.out,
+        )
+    else:
+        payload = sweep(
+            tuple(int(s) for s in args.sizes.split(",")),
+            budget_bytes=int(args.budget_mb * 2**20), dtype=args.dtype,
+            store=args.store, depth=args.depth, parity_max=args.parity_max,
+            out_path=args.out,
+        )
+
+    print(f"# {'n':>7} {'depth':>5} {'waves':>5} {'fits':>5} "
+          f"{'oot_s':>9} {'dense_s':>9} {'rel_err':>9}")
+    for r in payload["rows"]:
+        dense = f"{r['dense_s']:.4f}" if r["dense_s"] is not None else "-"
+        err = f"{r['rel_err']:.2e}" if r["rel_err"] is not None else "-"
+        print(f"# {r['n']:>7} {r['depth']:>5} {r['waves']:>5} "
+              f"{str(r['fits_on_device']):>5} {r['oot_s']:>9.4f} {dense:>9} {err:>9}")
+
+    if args.smoke:
+        bad = [r for r in payload["rows"] if r["ok"] is False]
+        if bad:
+            print(f"# SMOKE FAIL: parity drift beyond {payload['tolerance']}: "
+                  f"{[(r['n'], r['rel_err']) for r in bad]}")
+            sys.exit(1)
+        if any(r["waves"] < 2 for r in payload["rows"]):
+            print("# SMOKE FAIL: budget failed to force >= 2 staging waves")
+            sys.exit(1)
+        if not any(not r["fits_on_device"] for r in payload["rows"]):
+            print("# SMOKE FAIL: no size exceeded the device budget")
+            sys.exit(1)
+        top = payload["rows"][-1]
+        print(f"# smoke ok: n={top['n']} ran {top['waves']} waves under a "
+              f"{payload['budget_bytes']} B budget (operand {top['operand_bytes']} B)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ def main() -> None:
     from benchmarks import (
         autotune_sweep,
         fig8_fastest,
+        fig8_scaling,
         fig9_partition,
         fig10_theory,
         fig11_stagewise,
@@ -25,6 +26,7 @@ def main() -> None:
     suites = {
         "autotune": autotune_sweep.run,
         "fig8": fig8_fastest.run,
+        "fig8_scaling": fig8_scaling.run,
         "table6": table6_single_node.run,
         "table7": table7_leaf.run,
         "fig9": fig9_partition.run,

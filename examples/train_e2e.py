@@ -11,6 +11,10 @@ CI-scale run (~8M params, minutes):
   PYTHONPATH=src python examples/train_e2e.py --ci --steps 120
 Strassen-backend run (the paper's technique in the training path):
   PYTHONPATH=src python examples/train_e2e.py --ci --backend strassen
+Autotuned run — every projection resolves from the calibrated dispatcher,
+and the summary JSON records the measured step-time delta vs the
+hand-picked (naive) backend:
+  PYTHONPATH=src python examples/train_e2e.py --ci --backend auto --out run.json
 """
 import argparse
 import dataclasses
@@ -42,13 +46,31 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ci", action="store_true", help="8M-param CI-scale config")
-    ap.add_argument("--backend", choices=["naive", "strassen", "winograd"], default="naive")
+    ap.add_argument(
+        "--backend", choices=["naive", "strassen", "winograd", "auto"], default="naive",
+        help="'auto' sets ModelConfig(matmul_autotune=True): every dense "
+        "projection resolves from the calibrated dispatcher",
+    )
+    ap.add_argument(
+        "--compare-steps", type=int, default=20,
+        help="with --backend auto: steps of the hand-picked baseline run "
+        "used to measure the step-time delta (0 = skip)",
+    )
     ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
-    ap.add_argument("--out", default=None, help="write loss curve JSON here")
+    ap.add_argument("--out", default=None, help="write run summary JSON here")
     args = ap.parse_args()
 
     cfg = CI_8M if args.ci else FULL_100M
-    if args.backend != "naive":
+    handpicked_cfg = cfg  # config-default backend, the comparison baseline
+    if args.backend == "auto":
+        # The ROADMAP wiring: the flag (not a hand-built backend) drives
+        # the rewrite, so the run exercises exactly what users toggle.
+        cfg = dataclasses.replace(
+            cfg,
+            matmul_autotune=True,
+            matmul_backend=MatmulBackend(kind="auto", depth=2, min_dim=256),
+        )
+    elif args.backend != "naive":
         cfg = dataclasses.replace(
             cfg, matmul_backend=MatmulBackend(kind=args.backend, depth=1, min_dim=256)
         )
@@ -58,15 +80,37 @@ def main():
     opt = AdamWConfig(
         lr=args.lr, warmup_steps=max(args.steps // 20, 10), total_steps=args.steps
     )
+    run_stats = {}
     _, history = train_loop(
         cfg, opt,
         steps=args.steps, batch=args.batch, seq=args.seq,
         ckpt_dir=args.ckpt_dir, save_every=50, log_every=10,
+        stats_out=run_stats,
     )
     print(f"loss: first={history[0]:.4f} min={min(history):.4f} last={history[-1]:.4f}")
+
+    summary = {
+        "config": cfg.name,
+        "params": n_params,
+        "backend": args.backend,
+        "loss": history,
+        "median_step_time_s": run_stats.get("median_step_time_s"),
+    }
+    if args.backend == "auto" and args.compare_steps > 0:
+        from repro.core import autotune
+        from repro.launch.train import autotune_step_delta
+
+        summary.update(
+            autotune_step_delta(
+                handpicked_cfg, opt,
+                auto_step_time=run_stats.get("median_step_time_s", 0.0),
+                steps=args.compare_steps, batch=args.batch, seq=args.seq,
+            )
+        )
+        summary["autotune_kinds"] = autotune.get_telemetry().kind_counts()
     if args.out:
         with open(args.out, "w") as f:
-            json.dump({"config": cfg.name, "params": n_params, "loss": history}, f)
+            json.dump(summary, f)
         print(f"wrote {args.out}")
     assert history[-1] < history[0], "loss must decrease"
 

@@ -1,0 +1,50 @@
+"""Tagged BlockMatrix runtime: out-of-core Strassen over host block stores.
+
+The paper's defining mechanism is an RDD of *tagged* matrix blocks whose
+base-7 tag paths encode the recursion tree. This package is that mechanism
+re-expressed for a single-host JAX runtime whose device memory is the
+scarce resource:
+
+  tags         — the base-7 (M-index) / base-4 (quadrant) tag-path codec
+                 and the full divide/combine tag algebra.
+  blockmatrix  — (row, col, tag)-addressed blocks over a pluggable host
+                 store (dict, preallocated RAM arena, npy/memmap spill).
+  scheduler    — a level-order Strassen executor that stages the 7^q leaf
+                 multiplies through device memory in budgeted waves.
+
+Where Stark bounds per-executor memory by partitioning the RDD, this
+subsystem bounds peak *device* memory by a configurable byte budget while
+the operands live in host RAM or on disk — the out-of-core regime the
+paper's 16384^2-class experiments need on real hosts.
+"""
+from repro.blocks.blockmatrix import (
+    ArenaStore,
+    BlockMatrix,
+    BlockStore,
+    DictStore,
+    MemmapStore,
+    make_store,
+)
+from repro.blocks.scheduler import (
+    OotStats,
+    StrassenScheduler,
+    leaf_bytes,
+    min_depth_for_budget,
+    strassen_oot_matmul,
+)
+from repro.blocks import tags
+
+__all__ = [
+    "tags",
+    "BlockStore",
+    "DictStore",
+    "ArenaStore",
+    "MemmapStore",
+    "make_store",
+    "BlockMatrix",
+    "StrassenScheduler",
+    "OotStats",
+    "strassen_oot_matmul",
+    "leaf_bytes",
+    "min_depth_for_budget",
+]

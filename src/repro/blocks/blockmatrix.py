@@ -1,0 +1,430 @@
+"""(row, col, tag)-addressed block matrices over pluggable host stores.
+
+The MLlib/Marlin ``BlockMatrix`` layout (Zadeh et al.) as a host-resident
+runtime structure: a matrix is a uniform grid of (bm, bn) blocks, each
+addressed by ``(row, col, tag)`` where ``tag`` is a recursion tag-path
+string (:mod:`repro.blocks.tags`) naming the node of the Strassen tree the
+block belongs to — ``""`` for a root operand, ``"A:3,0"`` for the level-2
+divide product of A that took M-branches 3 then 0, and so on.
+
+Blocks live in a :class:`BlockStore`, which is deliberately dumb — put /
+get / delete numpy arrays by key — so the same :class:`BlockMatrix` code
+runs over three residencies:
+
+* :class:`DictStore`   — plain in-memory dict (tests, small problems);
+* :class:`ArenaStore`  — one preallocated host-RAM arena of fixed-size
+  slots with a free list, so a long multiply churns zero allocations and
+  the host footprint is a hard, visible number;
+* :class:`MemmapStore` — one ``.npy`` memmap file per block under a spill
+  directory, for operands larger than host RAM (the paper's "data far
+  larger than memory" regime, with the filesystem playing HDFS).
+
+Edge blocks are zero-padded to the full block shape in storage; the
+logical shape is metadata, so ``to_dense`` round-trips odd shapes exactly
+(padding contributes zero to every bilinear term — same argument as the
+fused kernel's padded wrapper).
+"""
+from __future__ import annotations
+
+import abc
+import os
+import shutil
+import tempfile
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BlockKey",
+    "BlockStore",
+    "DictStore",
+    "ArenaStore",
+    "MemmapStore",
+    "make_store",
+    "BlockMatrix",
+]
+
+BlockKey = Tuple[int, int, str]  # (block row, block col, tag string)
+
+
+class BlockStore(abc.ABC):
+    """Minimal key -> numpy-block storage contract."""
+
+    @abc.abstractmethod
+    def put(self, key: BlockKey, block: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def get(self, key: BlockKey) -> np.ndarray: ...
+
+    @abc.abstractmethod
+    def delete(self, key: BlockKey) -> None: ...
+
+    @abc.abstractmethod
+    def __contains__(self, key: BlockKey) -> bool: ...
+
+    @abc.abstractmethod
+    def keys(self) -> List[BlockKey]: ...
+
+    @abc.abstractmethod
+    def nbytes(self) -> int:
+        """Bytes currently held (logical block bytes, not slack)."""
+
+    def delete_tag(self, tag: str) -> None:
+        """Drop every block of one tree node (combine frees its children)."""
+        for key in [k for k in self.keys() if k[2] == tag]:
+            self.delete(key)
+
+    def clear(self) -> None:
+        for key in list(self.keys()):
+            self.delete(key)
+
+    def close(self) -> None:  # releases files/arenas; default no-op
+        self.clear()
+
+
+class DictStore(BlockStore):
+    """In-memory dict of blocks — the reference store."""
+
+    def __init__(self) -> None:
+        self._blocks: Dict[BlockKey, np.ndarray] = {}
+
+    def put(self, key: BlockKey, block: np.ndarray) -> None:
+        self._blocks[key] = np.ascontiguousarray(block)
+
+    def get(self, key: BlockKey) -> np.ndarray:
+        return self._blocks[key]
+
+    def delete(self, key: BlockKey) -> None:
+        self._blocks.pop(key, None)
+
+    def __contains__(self, key: BlockKey) -> bool:
+        return key in self._blocks
+
+    def keys(self) -> List[BlockKey]:
+        return list(self._blocks)
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._blocks.values())
+
+
+class ArenaStore(BlockStore):
+    """Preallocated host-RAM arena: fixed-size byte slots + a free list.
+
+    ``slot_bytes`` must cover the largest block the caller will put (the
+    scheduler sizes it as max over the A/B/C block shapes and dtypes —
+    slots are raw bytes, so bf16 operands and f32 accumulators share one
+    arena). The arena grows by whole segments of ``capacity`` slots when
+    full, so steady state churns zero allocations and peak host bytes are
+    ``segments * capacity * slot_bytes`` — a number you can print, which
+    is the point of an arena.
+    """
+
+    def __init__(self, slot_bytes: int, capacity: int = 64) -> None:
+        if slot_bytes <= 0 or capacity <= 0:
+            raise ValueError("slot_bytes and capacity must be positive")
+        self.slot_bytes = int(slot_bytes)
+        self.capacity = int(capacity)
+        self._segments: List[np.ndarray] = []
+        self._free: List[int] = []
+        # key -> (global slot index, block shape, block dtype)
+        self._index: Dict[BlockKey, Tuple[int, Tuple[int, ...], np.dtype]] = {}
+
+    def _grow(self) -> None:
+        base = len(self._segments) * self.capacity
+        self._segments.append(
+            np.empty((self.capacity, self.slot_bytes), np.uint8)
+        )
+        self._free.extend(reversed(range(base, base + self.capacity)))
+
+    def _slot(self, idx: int) -> np.ndarray:
+        return self._segments[idx // self.capacity][idx % self.capacity]
+
+    def put(self, key: BlockKey, block: np.ndarray) -> None:
+        block = np.ascontiguousarray(block)
+        if block.nbytes > self.slot_bytes:
+            raise ValueError(
+                f"block of {block.nbytes} B exceeds slot_bytes={self.slot_bytes}"
+            )
+        if key in self._index:
+            idx = self._index[key][0]
+        else:
+            if not self._free:
+                self._grow()
+            idx = self._free.pop()
+        self._slot(idx)[: block.nbytes] = block.reshape(-1).view(np.uint8)
+        self._index[key] = (idx, block.shape, block.dtype)
+
+    def get(self, key: BlockKey) -> np.ndarray:
+        idx, shape, dtype = self._index[key]
+        n = int(np.prod(shape)) * dtype.itemsize
+        return self._slot(idx)[:n].view(dtype).reshape(shape)
+
+    def delete(self, key: BlockKey) -> None:
+        entry = self._index.pop(key, None)
+        if entry is not None:
+            self._free.append(entry[0])
+
+    def __contains__(self, key: BlockKey) -> bool:
+        return key in self._index
+
+    def keys(self) -> List[BlockKey]:
+        return list(self._index)
+
+    def nbytes(self) -> int:
+        total = 0
+        for _, shape, dtype in self._index.values():
+            total += int(np.prod(shape)) * dtype.itemsize
+        return total
+
+    def arena_bytes(self) -> int:
+        """Allocated host footprint (all segments, used or free)."""
+        return sum(seg.nbytes for seg in self._segments)
+
+    def close(self) -> None:
+        self._index.clear()
+        self._free.clear()
+        self._segments.clear()
+
+
+class MemmapStore(BlockStore):
+    """npy/memmap spill backend: one ``.npy`` file per block.
+
+    Blocks are written with :func:`numpy.lib.format.open_memmap` (plain
+    ``np.load``-able files, bfloat16 included via ml_dtypes) under
+    ``root`` — a caller-owned spill directory, or a self-created temp dir
+    removed on :meth:`close`. ``get`` returns a read-only memmap, so a
+    combine touching 7 children pages in only the bytes it reads.
+    """
+
+    def __init__(self, root: Optional[str] = None) -> None:
+        self._owned = root is None
+        self.root = root or tempfile.mkdtemp(prefix="repro_blocks_")
+        os.makedirs(self.root, exist_ok=True)
+        # key -> (path, dtype): the npy header cannot name ml_dtypes
+        # (bfloat16 round-trips as void '|V2'), so the index keeps the true
+        # dtype and get() re-views the mapped bytes.
+        self._index: Dict[BlockKey, Tuple[str, np.dtype]] = {}
+        self._counter = 0
+
+    def _path(self, key: BlockKey) -> str:
+        entry = self._index.get(key)
+        if entry is not None:
+            return entry[0]
+        # filenames are opaque ids: tags contain ':' and ',' which are
+        # legal but ugly on some filesystems; the index owns the map.
+        path = os.path.join(self.root, f"blk{self._counter:08d}.npy")
+        self._counter += 1
+        return path
+
+    def put(self, key: BlockKey, block: np.ndarray) -> None:
+        block = np.ascontiguousarray(block)
+        path = self._path(key)
+        mm = np.lib.format.open_memmap(
+            path, mode="w+", dtype=block.dtype, shape=block.shape
+        )
+        mm[...] = block
+        mm.flush()
+        del mm
+        self._index[key] = (path, block.dtype)
+
+    def get(self, key: BlockKey) -> np.ndarray:
+        path, dtype = self._index[key]
+        mm = np.lib.format.open_memmap(path, mode="r")
+        return mm if mm.dtype == dtype else mm.view(dtype)
+
+    def delete(self, key: BlockKey) -> None:
+        entry = self._index.pop(key, None)
+        if entry is not None and os.path.exists(entry[0]):
+            os.remove(entry[0])
+
+    def __contains__(self, key: BlockKey) -> bool:
+        return key in self._index
+
+    def keys(self) -> List[BlockKey]:
+        return list(self._index)
+
+    def nbytes(self) -> int:
+        return sum(
+            os.path.getsize(p) for p, _ in self._index.values() if os.path.exists(p)
+        )
+
+    def close(self) -> None:
+        self._index.clear()
+        if self._owned and os.path.isdir(self.root):
+            shutil.rmtree(self.root, ignore_errors=True)
+
+
+def make_store(
+    spec: str | BlockStore,
+    *,
+    slot_bytes: int = 0,
+    capacity: int = 64,
+    root: Optional[str] = None,
+) -> BlockStore:
+    """Store factory for CLI/benchmark surfaces: 'dict' | 'arena' | 'memmap'."""
+    if isinstance(spec, BlockStore):
+        return spec
+    if spec == "dict":
+        return DictStore()
+    if spec == "arena":
+        if slot_bytes <= 0:
+            raise ValueError("arena store needs slot_bytes > 0")
+        return ArenaStore(slot_bytes, capacity=capacity)
+    if spec == "memmap":
+        return MemmapStore(root)
+    raise ValueError(f"unknown store {spec!r}; have 'dict', 'arena', 'memmap'")
+
+
+class BlockMatrix:
+    """A logical (m, n) matrix stored as a tagged grid of uniform blocks.
+
+    ``shape`` is the logical shape; the stored grid covers
+    ``grid = (ceil(m / bm), ceil(n / bn))`` blocks of exactly
+    ``block_shape``, edge blocks zero-padded. ``tag`` names the recursion
+    node every block of this matrix belongs to and is part of each block's
+    store key, so many tree nodes share one store.
+    """
+
+    def __init__(
+        self,
+        store: BlockStore,
+        shape: Tuple[int, int],
+        block_shape: Tuple[int, int],
+        dtype,
+        tag: str = "",
+    ) -> None:
+        m, n = shape
+        bm, bn = block_shape
+        if m <= 0 or n <= 0 or bm <= 0 or bn <= 0:
+            raise ValueError(f"bad shape {shape} / block_shape {block_shape}")
+        self.store = store
+        self.shape = (int(m), int(n))
+        self.block_shape = (int(bm), int(bn))
+        self.dtype = np.dtype(dtype)
+        self.tag = tag
+        self.grid = (-(-m // bm), -(-n // bn))
+
+    # ------------------------------------------------------------- metadata
+    @property
+    def padded_shape(self) -> Tuple[int, int]:
+        return (
+            self.grid[0] * self.block_shape[0],
+            self.grid[1] * self.block_shape[1],
+        )
+
+    @property
+    def nbytes(self) -> int:
+        """Stored bytes of this matrix (full padded grid)."""
+        return (
+            self.grid[0]
+            * self.grid[1]
+            * self.block_shape[0]
+            * self.block_shape[1]
+            * self.dtype.itemsize
+        )
+
+    def meta(self) -> Dict:
+        """dtype/layout metadata travelling with the blocks."""
+        return {
+            "shape": self.shape,
+            "padded_shape": self.padded_shape,
+            "block_shape": self.block_shape,
+            "grid": self.grid,
+            "dtype": self.dtype.name,
+            "tag": self.tag,
+            "layout": "row-major",
+        }
+
+    def key(self, i: int, j: int) -> BlockKey:
+        return (i, j, self.tag)
+
+    def block_keys(self) -> Iterator[BlockKey]:
+        for i in range(self.grid[0]):
+            for j in range(self.grid[1]):
+                yield self.key(i, j)
+
+    # ---------------------------------------------------------- block access
+    def block(self, i: int, j: int) -> np.ndarray:
+        """The stored (bm, bn) block at grid position (i, j)."""
+        if not (0 <= i < self.grid[0] and 0 <= j < self.grid[1]):
+            raise IndexError(f"block ({i}, {j}) outside grid {self.grid}")
+        return self.store.get(self.key(i, j))
+
+    def put_block(self, i: int, j: int, block: np.ndarray) -> None:
+        if tuple(block.shape) != self.block_shape:
+            raise ValueError(
+                f"block shape {block.shape} != {self.block_shape} (store padded)"
+            )
+        self.store.put(self.key(i, j), np.asarray(block, self.dtype))
+
+    def free(self) -> None:
+        """Delete every block of this matrix from the store."""
+        for key in self.block_keys():
+            self.store.delete(key)
+
+    # ------------------------------------------------------- dense interop
+    @classmethod
+    def from_dense(
+        cls,
+        arr: np.ndarray,
+        block_shape: Tuple[int, int],
+        store: Optional[BlockStore] = None,
+        tag: str = "",
+        shape: Optional[Tuple[int, int]] = None,
+    ) -> "BlockMatrix":
+        """Ingest a dense array block by block.
+
+        ``shape`` (>= ``arr.shape``) zero-extends the matrix to a larger
+        logical shape without materializing the padded dense copy — the
+        scheduler uses it to align operands to the recursion grain.
+        """
+        arr = np.asarray(arr)
+        if arr.ndim != 2:
+            raise ValueError(f"need a 2-D array, got shape {arr.shape}")
+        shape = tuple(shape) if shape is not None else arr.shape
+        if shape[0] < arr.shape[0] or shape[1] < arr.shape[1]:
+            raise ValueError(f"shape {shape} smaller than data {arr.shape}")
+        store = store if store is not None else DictStore()
+        bm_mat = cls(store, shape, block_shape, arr.dtype, tag)
+        bm, bn = bm_mat.block_shape
+        for i in range(bm_mat.grid[0]):
+            for j in range(bm_mat.grid[1]):
+                chunk = arr[i * bm : (i + 1) * bm, j * bn : (j + 1) * bn]
+                if chunk.shape != (bm, bn):
+                    full = np.zeros((bm, bn), bm_mat.dtype)
+                    full[: chunk.shape[0], : chunk.shape[1]] = chunk
+                    chunk = full
+                bm_mat.put_block(i, j, np.asarray(chunk, bm_mat.dtype))
+        return bm_mat
+
+    @classmethod
+    def zeros(
+        cls,
+        shape: Tuple[int, int],
+        block_shape: Tuple[int, int],
+        store: BlockStore,
+        dtype,
+        tag: str = "",
+    ) -> "BlockMatrix":
+        out = cls(store, shape, block_shape, dtype, tag)
+        zero = np.zeros(out.block_shape, out.dtype)
+        for i in range(out.grid[0]):
+            for j in range(out.grid[1]):
+                out.put_block(i, j, zero)
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        bm, bn = self.block_shape
+        out = np.empty(self.padded_shape, self.dtype)
+        for i in range(self.grid[0]):
+            for j in range(self.grid[1]):
+                out[i * bm : (i + 1) * bm, j * bn : (j + 1) * bn] = self.block(i, j)
+        return out[:m, :n]
+
+    def __repr__(self) -> str:
+        return (
+            f"BlockMatrix(shape={self.shape}, block={self.block_shape}, "
+            f"grid={self.grid}, dtype={self.dtype.name}, tag={self.tag!r}, "
+            f"store={type(self.store).__name__})"
+        )

@@ -1,0 +1,498 @@
+"""Level-order out-of-core Strassen executor over tagged block stores.
+
+This is the paper's level-parallel recursion (Fig. 2) re-targeted at the
+host/device memory hierarchy instead of a Spark cluster:
+
+* **divide** — for each level, every tree node's seven children are formed
+  by signed sums of the parent's quadrant blocks (Stark's
+  flatMapToPair/groupByKey/flatMap stage). These are host-side numpy adds
+  streaming block-by-block through the :class:`~repro.blocks.blockmatrix
+  .BlockStore`, so host working set is O(block), not O(matrix).
+* **leaf** — the 7^q leaf products are batched into *waves* sized so that
+  (current wave operands + products + prefetched next-wave operands) fit a
+  configurable device-memory budget. Each wave is staged with
+  ``jax.device_put`` and dispatched through the standard
+  :func:`repro.core.backend.matmul` routing (``kind="auto"`` by default,
+  so the calibrated dispatcher picks naive/Strassen/fused per leaf shape);
+  the next wave's operands are put on device while the current wave
+  computes — double buffering, JAX's async dispatch does the overlap.
+* **combine** — level-order bottom-up signed sums of the seven child
+  products into each parent's quadrants (Stark's combine stage), again
+  host-side and block-streaming; child nodes are freed as soon as their
+  parent is built.
+
+Peak device bytes are therefore bounded by the budget rather than the
+problem size — the paper's "matrices far larger than memory" regime with
+device HBM playing the executor and the host store playing HDFS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.blocks import tags
+from repro.blocks.blockmatrix import BlockMatrix, BlockStore, make_store
+from repro.core.coefficients import Scheme, get_scheme
+
+__all__ = [
+    "OotStats",
+    "StrassenScheduler",
+    "strassen_oot_matmul",
+    "leaf_bytes",
+    "min_depth_for_budget",
+]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _leaf_dims(m: int, k: int, n: int, depth: int) -> Tuple[int, int, int]:
+    step = 2**depth
+    return _ceil_div(m, step), _ceil_div(k, step), _ceil_div(n, step)
+
+
+def leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
+    """Device bytes one leaf multiply needs: A + B operands + C product.
+
+    Sized at the scheduler's default *staging* dtype — the accumulation
+    dtype of ``dtype`` (f32 for bf16 inputs; see
+    :class:`StrassenScheduler`) — so budget planning is conservative for
+    callers that narrow staging to the compute dtype.
+    """
+    lm, lk, ln = _leaf_dims(m, k, n, depth)
+    item = np.dtype(np.result_type(np.dtype(dtype), np.float32)).itemsize
+    return (lm * lk + lk * ln + lm * ln) * item
+
+
+def min_depth_for_budget(
+    m: int, k: int, n: int, budget_bytes: int, dtype, max_depth: int = 12
+) -> int:
+    """Smallest recursion depth whose single leaf fits the device budget.
+
+    The scheduler needs at least one leaf's (A, B, C) resident; callers
+    wanting double-buffered waves should leave ~2x headroom (or pass one
+    level deeper).
+    """
+    for depth in range(1, max_depth + 1):
+        if leaf_bytes(m, k, n, depth, dtype) <= budget_bytes:
+            return depth
+    raise ValueError(
+        f"no depth <= {max_depth} fits ({m}x{k}x{n}, {np.dtype(dtype).name}) "
+        f"leaves into {budget_bytes} bytes"
+    )
+
+
+@dataclasses.dataclass
+class OotStats:
+    """Execution telemetry for one out-of-core multiply."""
+
+    m: int
+    k: int
+    n: int
+    depth: int
+    scheme: str
+    leaves: int
+    waves: int
+    wave_size: int
+    prefetch: bool
+    stage_dtype: str
+    budget_bytes: int
+    per_leaf_bytes: int
+    peak_device_bytes: int
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    host_store_peak_bytes: int = 0
+    divide_s: float = 0.0
+    leaf_s: float = 0.0
+    combine_s: float = 0.0
+    total_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class StrassenScheduler:
+    """Budgeted level-order Strassen over a host-resident block store.
+
+    Args:
+      depth: recursion depth q (7^q leaves). Must make a leaf fit the
+        budget — see :func:`min_depth_for_budget`.
+      budget_bytes: peak device bytes the leaf waves may occupy.
+      scheme: coefficient scheme (strassen | winograd | naive8).
+      backend: :class:`repro.core.backend.MatmulBackend` routing for the
+        leaf multiplies; defaults to ``kind="auto"`` so each leaf shape
+        goes through the calibrated dispatcher (and, transitively, any
+        registered mesh strategy a future resolve chooses).
+      block: target block side for the store partition; ``None`` stores
+        one block per leaf operand (the coarsest legal grain).
+      prefetch: double-buffer the next wave's host->device staging while
+        the current wave computes. Automatically disabled when the budget
+        only fits a single un-prefetched wave.
+      stage_dtype: dtype of the staged leaf operands (and so of the leaf
+        multiply). ``None`` — the default — stages in the accumulation
+        dtype (f32 for bf16 inputs): operand combos never round until the
+        final output cast, the Huang-et-al. packing-buffer discipline,
+        which holds deep-recursion bf16 parity to ~1e-3. Pass the compute
+        dtype explicitly to halve staging volume at the cost of one
+        rounding per leaf operand (depth-2 bf16 parity degrades to ~2e-2).
+    """
+
+    def __init__(
+        self,
+        *,
+        depth: int,
+        budget_bytes: int,
+        scheme: Scheme | str = "strassen",
+        backend=None,
+        block: Optional[int] = None,
+        prefetch: bool = True,
+        stage_dtype=None,
+    ) -> None:
+        if depth < 1:
+            raise ValueError("out-of-core Strassen needs depth >= 1")
+        if budget_bytes <= 0:
+            raise ValueError("budget_bytes must be positive")
+        self.depth = depth
+        self.budget_bytes = int(budget_bytes)
+        self.scheme = get_scheme(scheme) if isinstance(scheme, str) else scheme
+        self.block = block
+        self.prefetch = prefetch
+        self.stage_dtype = stage_dtype
+        if backend is None:
+            from repro.core.backend import MatmulBackend
+
+            backend = MatmulBackend(kind="auto", depth=2, min_dim=1024)
+        self.backend = backend
+
+    # ------------------------------------------------------------ internals
+    @staticmethod
+    def _node_tag(op: str, path: Tuple[int, ...]) -> str:
+        return f"{op}:{tags.to_string(path)}"
+
+    def _node(
+        self,
+        store: BlockStore,
+        op: str,
+        path: Tuple[int, ...],
+        root_shape: Tuple[int, int],
+        block_shape: Tuple[int, int],
+        dtype,
+    ) -> BlockMatrix:
+        level = len(path)
+        shape = (root_shape[0] >> level, root_shape[1] >> level)
+        return BlockMatrix(store, shape, block_shape, dtype, self._node_tag(op, path))
+
+    @staticmethod
+    def _signed_sum(get_block, coefs: np.ndarray, acc_dtype) -> np.ndarray:
+        """sum_i coefs[i] * get_block(i) with zero-skip and +/-1 fast paths.
+
+        The one accumulation discipline both divide and combine share:
+        terms are read through ``.astype`` (ml_dtypes/bf16 memmaps fail
+        numpy's direct-cast buffer path) and summed in ``acc_dtype``.
+        """
+        acc = None
+        for idx in range(len(coefs)):
+            c = float(coefs[idx])
+            if c == 0.0:
+                continue
+            blk = np.asarray(get_block(idx)).astype(acc_dtype, copy=False)
+            term = blk if c == 1.0 else (-blk if c == -1.0 else c * blk)
+            acc = term if acc is None else acc + term
+        assert acc is not None, "coefficient row is all zero"
+        return acc
+
+    def _divide_child(
+        self,
+        parent: BlockMatrix,
+        child: BlockMatrix,
+        coef_row: np.ndarray,
+        acc_dtype,
+    ) -> None:
+        """child = sum_q coef_row[q] * quadrant_q(parent), block-streamed."""
+        gr, gc = child.grid
+        for i in range(gr):
+            for j in range(gc):
+                acc = self._signed_sum(
+                    lambda q: parent.block((q // 2) * gr + i, (q % 2) * gc + j),
+                    coef_row, acc_dtype,
+                )
+                child.put_block(i, j, acc.astype(child.dtype))
+
+    def _combine_parent(
+        self,
+        children: Sequence[BlockMatrix],
+        parent: BlockMatrix,
+        acc_dtype,
+    ) -> None:
+        """parent quadrants = sum_p c_coef[k, p] * child_p, block-streamed."""
+        gr, gc = children[0].grid
+        c_coef = self.scheme.c_coef
+        for kq in range(tags.Q_BASE):
+            for i in range(gr):
+                for j in range(gc):
+                    acc = self._signed_sum(
+                        lambda p: children[p].block(i, j), c_coef[kq], acc_dtype
+                    )
+                    parent.put_block(
+                        (kq // 2) * gr + i, (kq % 2) * gc + j, acc.astype(parent.dtype)
+                    )
+
+    def _leaf_matmul(self, a_dev, b_dev):
+        from repro.core import backend as _backend
+
+        return _backend.matmul(a_dev, b_dev, self.backend, site="blocks.leaf")
+
+    # -------------------------------------------------------------- the run
+    def matmul(
+        self,
+        a: np.ndarray,
+        b: np.ndarray,
+        *,
+        store: str | BlockStore = "dict",
+        store_root: Optional[str] = None,
+    ) -> Tuple[np.ndarray, OotStats]:
+        """``a @ b`` with device memory bounded by the budget.
+
+        ``a``/``b`` are host arrays (numpy or anything ``np.asarray``
+        accepts, bfloat16 included). ``store`` picks the block residency:
+        'dict' | 'arena' | 'memmap' or a ready :class:`BlockStore`.
+        """
+        import jax
+
+        t_start = time.perf_counter()
+        a = np.asarray(a)
+        b = np.asarray(b)
+        if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+            raise ValueError(f"bad matmul shapes {a.shape} @ {b.shape}")
+        dtype = np.result_type(a.dtype, b.dtype)
+        acc_dtype = np.result_type(dtype, np.float32)
+        m, k = a.shape
+        n = b.shape[1]
+        depth, rank = self.depth, self.scheme.n_mults
+
+        # Recursion-aligned padded dims and the block partition. With an
+        # explicit block grain each leaf dim rounds up to a whole number of
+        # blocks so every level's grid halves exactly.
+        lm, lk, ln = _leaf_dims(m, k, n, depth)
+        if self.block is not None:
+            bam = min(self.block, lm)
+            bak = min(self.block, lk)
+            bbn = min(self.block, ln)
+            lm, lk, ln = (
+                _ceil_div(lm, bam) * bam,
+                _ceil_div(lk, bak) * bak,
+                _ceil_div(ln, bbn) * bbn,
+            )
+        else:
+            bam, bak, bbn = lm, lk, ln
+        pm, pk, pn = lm << depth, lk << depth, ln << depth
+
+        stage_dtype = (
+            np.dtype(self.stage_dtype) if self.stage_dtype is not None else acc_dtype
+        )
+        itemsize = stage_dtype.itemsize
+        in_bytes = (lm * lk + lk * ln) * itemsize
+        per_leaf = in_bytes + lm * ln * itemsize
+        prefetch = self.prefetch
+        wave_size = self.budget_bytes // (per_leaf + in_bytes) if prefetch else 0
+        if wave_size < 1:
+            prefetch = False
+            wave_size = self.budget_bytes // per_leaf
+        if wave_size < 1:
+            raise ValueError(
+                f"device budget {self.budget_bytes} B cannot hold one "
+                f"{lm}x{lk}x{ln} {np.dtype(dtype).name} leaf ({per_leaf} B); "
+                f"use depth >= "
+                f"{min_depth_for_budget(m, k, n, self.budget_bytes, dtype)}"
+            )
+
+        # Divide/combine chains accumulate (and store) in acc_dtype; blocks
+        # round at most once — operands at the staging cast, C at the final
+        # cast. One rounding per value instead of one per level is the same
+        # discipline as the fused kernel's fp32 MXU accumulation, and what
+        # keeps depth>=2 bf16 parity inside 1e-2. Leaf compute and H2D/D2H
+        # volume run at ``stage_dtype`` — the accumulation dtype by default
+        # (2x the compute-dtype bytes for bf16 inputs), narrowed to the
+        # compute dtype via the ``stage_dtype`` knob.
+        acc_item = np.dtype(acc_dtype).itemsize
+        slot_bytes = max(bam * bak, bak * bbn, bam * bbn) * acc_item
+        # Stores built here from a spec are owned (and closed) here;
+        # caller-provided BlockStore instances stay open for inspection.
+        owned_store = not isinstance(store, BlockStore)
+        store = make_store(store, slot_bytes=slot_bytes, root=store_root)
+        try:
+
+            leaves = rank**depth
+            stats = OotStats(
+                m=m, k=k, n=n, depth=depth, scheme=self.scheme.name,
+                leaves=leaves, waves=0, wave_size=wave_size, prefetch=prefetch,
+                stage_dtype=stage_dtype.name,
+                budget_bytes=self.budget_bytes, per_leaf_bytes=per_leaf,
+                peak_device_bytes=0,
+            )
+
+            # --- ingest roots (edge/odd dims zero-extend to the padded grain).
+            a_root = BlockMatrix.from_dense(
+                a, (bam, bak), store, self._node_tag("A", ()), shape=(pm, pk)
+            )
+            b_root = BlockMatrix.from_dense(
+                b, (bak, bbn), store, self._node_tag("B", ()), shape=(pk, pn)
+            )
+
+            # --- divide: level-order, all rank^level nodes per level.
+            t0 = time.perf_counter()
+            for level in range(depth):
+                p_dtype = dtype if level == 0 else acc_dtype
+                for path in tags.leaf_paths(level, rank):
+                    pa = self._node(store, "A", path, (pm, pk), (bam, bak), p_dtype)
+                    pb = self._node(store, "B", path, (pk, pn), (bak, bbn), p_dtype)
+                    for p in range(rank):
+                        ca = self._node(
+                            store, "A", tags.child(path, p, rank), (pm, pk),
+                            (bam, bak), acc_dtype,
+                        )
+                        cb = self._node(
+                            store, "B", tags.child(path, p, rank), (pk, pn),
+                            (bak, bbn), acc_dtype,
+                        )
+                        self._divide_child(pa, ca, self.scheme.a_coef[p], acc_dtype)
+                        self._divide_child(pb, cb, self.scheme.b_coef[p], acc_dtype)
+                stats.host_store_peak_bytes = max(
+                    stats.host_store_peak_bytes, store.nbytes()
+                )
+                # Parents are consumed: only the leaf level feeds the multiply.
+                # Freed via the node's own key iteration (O(blocks-of-node)),
+                # not delete_tag's full-store key scan.
+                for path in tags.leaf_paths(level, rank):
+                    self._node(store, "A", path, (pm, pk), (bam, bak), p_dtype).free()
+                    self._node(store, "B", path, (pk, pn), (bak, bbn), p_dtype).free()
+            stats.divide_s = time.perf_counter() - t0
+            stats.host_store_peak_bytes = max(stats.host_store_peak_bytes, store.nbytes())
+
+            # --- leaf waves: stage -> dispatch -> (prefetch next) -> fetch.
+            t0 = time.perf_counter()
+            leaf_list = list(tags.leaf_paths(depth, rank))
+            waves: List[List[Tuple[int, ...]]] = [
+                leaf_list[i : i + wave_size] for i in range(0, leaves, wave_size)
+            ]
+
+            def stage(wave: List[Tuple[int, ...]]):
+                staged = []
+                for path in wave:
+                    na = self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype)
+                    nb = self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype)
+                    # Any rounding to a narrower staging dtype happens here, at
+                    # the host->device boundary — never mid-chain.
+                    staged.append(
+                        (
+                            path,
+                            jax.device_put(na.to_dense().astype(stage_dtype, copy=False)),
+                            jax.device_put(nb.to_dense().astype(stage_dtype, copy=False)),
+                        )
+                    )
+                    stats.h2d_bytes += in_bytes
+                return staged
+
+            staged = stage(waves[0]) if waves else []
+            for w_idx, wave in enumerate(waves):
+                current, staged = staged, None
+                if current is None:  # prefetch off: stage synchronously
+                    current = stage(wave)
+                outs = [
+                    (path, self._leaf_matmul(a_dev, b_dev))
+                    for path, a_dev, b_dev in current
+                ]
+                nxt = waves[w_idx + 1] if w_idx + 1 < len(waves) else None
+                device_now = len(wave) * per_leaf
+                if prefetch and nxt is not None:
+                    # Async H2D of the next wave overlaps the current compute.
+                    staged = stage(nxt)
+                    device_now += len(nxt) * in_bytes
+                stats.peak_device_bytes = max(stats.peak_device_bytes, device_now)
+                for path, out in outs:
+                    host = np.asarray(out)
+                    stats.d2h_bytes += host.nbytes
+                    host = host.astype(acc_dtype, copy=False)
+                    cn = self._node(store, "C", path, (pm, pn), (bam, bbn), acc_dtype)
+                    for i in range(cn.grid[0]):
+                        for j in range(cn.grid[1]):
+                            cn.put_block(
+                                i, j,
+                                host[i * bam : (i + 1) * bam, j * bbn : (j + 1) * bbn],
+                            )
+                    self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype).free()
+                    self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype).free()
+                # Drop this wave's device references before the next wave
+                # dispatches: the fetched product buffers would otherwise stay
+                # resident through the next compute and break the budget bound.
+                current = outs = None
+                stats.waves += 1
+                stats.host_store_peak_bytes = max(
+                    stats.host_store_peak_bytes, store.nbytes()
+                )
+            stats.leaf_s = time.perf_counter() - t0
+
+            # --- combine: level-order bottom-up, freeing children as we go.
+            t0 = time.perf_counter()
+            for level in reversed(range(depth)):
+                for path in tags.leaf_paths(level, rank):
+                    children = [
+                        self._node(
+                            store, "C", tags.child(path, p, rank), (pm, pn),
+                            (bam, bbn), acc_dtype,
+                        )
+                        for p in range(rank)
+                    ]
+                    parent = self._node(
+                        store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                    )
+                    self._combine_parent(children, parent, acc_dtype)
+                    for child in children:
+                        child.free()
+                stats.host_store_peak_bytes = max(
+                    stats.host_store_peak_bytes, store.nbytes()
+                )
+            stats.combine_s = time.perf_counter() - t0
+
+            c_root = self._node(store, "C", (), (pm, pn), (bam, bbn), acc_dtype)
+            result = c_root.to_dense()[:m, :n].astype(dtype, copy=False)
+            a_root.free()
+            b_root.free()
+            c_root.free()
+        finally:
+            if owned_store:
+                store.close()
+        stats.total_s = time.perf_counter() - t_start
+        return result, stats
+
+
+def strassen_oot_matmul(
+    a: np.ndarray,
+    b: np.ndarray,
+    *,
+    depth: int,
+    budget_bytes: int,
+    scheme: Scheme | str = "strassen",
+    backend=None,
+    block: Optional[int] = None,
+    prefetch: bool = True,
+    stage_dtype=None,
+    store: str | BlockStore = "dict",
+    store_root: Optional[str] = None,
+) -> Tuple[np.ndarray, OotStats]:
+    """Functional wrapper: one out-of-core Strassen multiply.
+
+    See :class:`StrassenScheduler` for the parameters; this is the entry
+    point :mod:`repro.core.backend` (kind='strassen_oot'), the autotuner's
+    ``strassen_oot`` candidate family, ``launch/blocks_demo.py``, and
+    ``benchmarks/fig8_scaling.py`` share.
+    """
+    sched = StrassenScheduler(
+        depth=depth, budget_bytes=budget_bytes, scheme=scheme,
+        backend=backend, block=block, prefetch=prefetch, stage_dtype=stage_dtype,
+    )
+    return sched.matmul(a, b, store=store, store_root=store_root)

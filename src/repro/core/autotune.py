@@ -31,12 +31,16 @@ loop, turned into a dispatcher:
    re-measurement. Call-site tags let same-shape projections (e.g. a QKV
    and an MLP projection of equal width) diverge under measured mode.
 
-Three constants, two regimes: ``t_flop``/``t_elem`` come from intra-device
+Four constants, three regimes: ``t_flop``/``t_elem`` come from intra-device
 micro-benchmarks; ``t_coll`` is fit separately by
 :func:`calibrate_collective` (an all-gather + reduce-scatter round trip
 over every addressable device) and prices the *interconnect* element
 traffic of the mesh strategies — divide/combine resharding, combine psums,
-SUMMA panel broadcasts. Every resolution is logged to the process
+SUMMA panel broadcasts; ``t_h2d`` is fit by :func:`calibrate_h2d` (a
+device_put + fetch round trip) and prices the *host<->device staging*
+traffic of the out-of-core ``strassen_oot`` family
+(:mod:`repro.blocks`), whose candidates enumerate when the caller passes
+a device-memory budget. Every resolution is logged to the process
 :class:`Telemetry` (cache hit/miss, chosen kind, predicted-vs-measured
 seconds), which the serving engine exposes in its stats and
 ``benchmarks/autotune_sweep.py`` dumps. Real-TPU measured-mode calibration
@@ -68,10 +72,13 @@ __all__ = [
     "TelemetryEvent",
     "calibrate",
     "calibrate_collective",
+    "calibrate_h2d",
     "get_calibration",
+    "calibration_snapshot",
     "get_telemetry",
     "enumerate_candidates",
     "predict_seconds",
+    "predict_cost_terms",
     "measure_seconds",
     "execute",
     "autotune",
@@ -85,6 +92,10 @@ LOCAL_SCHEMES: Tuple[str, ...] = ("strassen", "winograd")
 # The Pallas fused-leaf pipeline: local, but gated on the leaf running
 # (compat.pallas_leaf_mode) rather than always-legal like the einsum BFS.
 FUSED_KIND = "strassen_fused"
+# The out-of-core tagged-block pipeline (repro.blocks): host-resident
+# operands staged through device memory in budgeted waves. Enumerated only
+# when the caller supplies a device-memory budget (``oot_budget``).
+OOT_KIND = "strassen_oot"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +150,10 @@ class Calibration:
     # reduce-scatter); 0.0 means "not calibrated" (single device or a
     # pre-t_coll cache) and predictions fall back to t_elem, the old model.
     t_coll: float = 0.0
+    # seconds per element through host<->device staging (device_put + fetch
+    # round trip) — prices the out-of-core pipeline's leaf-wave traffic.
+    # 0.0 means "not calibrated" (pre-t_h2d cache); falls back to t_elem.
+    t_h2d: float = 0.0
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -193,6 +208,36 @@ def calibrate_collective(sample_dim: int = 512, repeats: int = 3) -> float:
     return t / (2.0 * rows * sample_dim)
 
 
+def calibrate_h2d(sample_dim: int = 1024, repeats: int = 3) -> float:
+    """Fit ``t_h2d`` from a host->device + device->host staging round trip.
+
+    One ``jax.device_put`` of a host f32 array plus one ``np.asarray``
+    fetch — exactly the per-leaf traffic of the out-of-core scheduler's
+    staging waves (operands up, product down). The fit is seconds per
+    element through the host<->device boundary, the PCIe/ICI analogue of
+    ``t_elem``. On hosts where the "device" is host RAM (CPU jax) this is
+    close to a memcpy — correctly tiny, so the model only penalizes
+    staging where staging actually costs.
+    """
+    import numpy as np
+
+    x = np.ones((sample_dim, sample_dim), np.float32)
+    # A jitted identity, not a bare device_put: calibration can trigger at
+    # jit-trace time (resolve_auto runs while a train step traces), and
+    # device_put binds under the ambient trace — a jit call with concrete
+    # args escapes it, like the other micro-benchmarks.
+    identity = jax.jit(lambda v: v)
+
+    def roundtrip():
+        dev = identity(x)
+        jax.block_until_ready(dev)
+        np.asarray(dev)
+
+    t = _time_best(roundtrip, repeats)
+    # One pass up, one pass down.
+    return t / (2.0 * sample_dim * sample_dim)
+
+
 def calibrate(sample_dim: int = 256, repeats: int = 3) -> Calibration:
     """Fit (t_flop, t_elem, t_coll) from on-device micro-benchmarks.
 
@@ -228,6 +273,7 @@ def calibrate(sample_dim: int = 256, repeats: int = 3) -> Calibration:
         device_kind=dev.platform,
         device_count=jax.device_count(),
         t_coll=float(calibrate_collective(repeats=repeats)),
+        t_h2d=float(calibrate_h2d(repeats=repeats)),
     )
 
 
@@ -235,11 +281,29 @@ _CALIBRATION: Optional[Calibration] = None
 
 
 def get_calibration() -> Calibration:
-    """Process-cached calibration (one micro-benchmark pair per process)."""
+    """Process-cached calibration (one micro-benchmark pair per process).
+
+    Runs under ``ensure_compile_time_eval``: the first resolution usually
+    fires at jit-trace time (resolve_auto inside a traced train step, even
+    inside scan bodies), where the micro-benchmarks' jit/device_put calls
+    would otherwise stage into the ambient trace instead of executing.
+    """
     global _CALIBRATION
     if _CALIBRATION is None:
-        _CALIBRATION = calibrate()
+        with jax.ensure_compile_time_eval():
+            _CALIBRATION = calibrate()
     return _CALIBRATION
+
+
+def calibration_snapshot() -> Optional[Dict]:
+    """The current calibration as a dict, or None if none has run yet.
+
+    Never triggers the micro-benchmarks — stats surfaces (e.g.
+    ``Engine.autotune_stats``) use this to report t_flop/t_elem/t_coll/
+    t_h2d without paying device time on an engine that resolved every
+    decision from a warm cache.
+    """
+    return _CALIBRATION.to_dict() if _CALIBRATION is not None else None
 
 
 # --------------------------------------------------------------------------
@@ -266,12 +330,19 @@ def enumerate_candidates(
     max_depth: int = 3,
     min_dim: int = 1024,
     mesh=None,
+    oot_budget: Optional[int] = None,
+    dtype=jnp.float32,
 ) -> List[Candidate]:
     """All strategies that can legally run this shape (naive always can).
 
     ``strassen_fused`` (the Pallas fused-leaf pipeline) enumerates whenever
     the leaf actually runs on this host — compiled on TPU, interpret mode
     on CPU — per :func:`repro.core.compat.pallas_leaf_mode`.
+
+    ``oot_budget`` (device bytes) enables the ``strassen_oot`` out-of-core
+    family: one candidate per scheme at every depth whose single leaf fits
+    the budget — including depths the in-core rules reject (odd dims: the
+    block runtime pads), which is the whole point of the pipeline.
     """
     from repro.core import compat
 
@@ -294,6 +365,42 @@ def enumerate_candidates(
                 else:
                     for d in depths:
                         cands.append(Candidate(kind=name, scheme=scheme, depth=d))
+    if oot_budget:
+        from repro.blocks.scheduler import leaf_bytes, min_depth_for_budget
+
+        # A dense on-device multiply needs A + B + C resident at once.
+        dense_bytes = (m * k + k * n + m * n) * jnp.dtype(dtype).itemsize
+        dense_fits = dense_bytes <= oot_budget
+        try:
+            d0 = min_depth_for_budget(m, k, n, oot_budget, dtype)
+        except ValueError:
+            d0 = None
+        # Crossover guard: below min_dim the divide/combine + staging
+        # overhead dominates exactly as it does for the in-core pipelines
+        # (measured 24x at n=128 on the smoke constants) — unless the
+        # dense working set cannot fit the budget, where out-of-core is
+        # feasibility, not preference.
+        if d0 is not None and (min(m, k, n) >= min_dim or not dense_fits):
+            # Depths run from the shallowest that fits to max_depth — or
+            # deeper when the budget demands it (an out-of-core plan may
+            # legally exceed the in-core depth cap; that cap exists to
+            # bound divide overhead, not feasibility).
+            for scheme in schemes:
+                for d in range(d0, max(max_depth, d0) + 1):
+                    if leaf_bytes(m, k, n, d, dtype) <= oot_budget and min(
+                        m, k, n
+                    ) >= 2**d:
+                        cands.append(Candidate(kind=OOT_KIND, scheme=scheme, depth=d))
+        # When the dense working set exceeds the budget every on-device
+        # candidate (mesh strategies included: the budget models each
+        # device's memory) is infeasible, not merely slow — drop them so
+        # the planner cannot pick an impossible plan. Runs LAST so the
+        # invariant holds over the full candidate set. (Falls back to the
+        # unfiltered list if no oot depth fits either, so callers still
+        # get a best-effort decision.)
+        if not dense_fits:
+            oot_only = [c for c in cands if c.kind == OOT_KIND]
+            cands = oot_only or cands
     return cands
 
 
@@ -302,7 +409,7 @@ def enumerate_candidates(
 # --------------------------------------------------------------------------
 
 
-def predict_seconds(
+def predict_cost_terms(
     cand: Candidate,
     m: int,
     k: int,
@@ -310,33 +417,27 @@ def predict_seconds(
     calib: Calibration,
     *,
     device_count: int = 1,
-) -> float:
-    """Predicted wall-clock for one multiply under the calibrated model.
+) -> Dict[str, float]:
+    """Per-constant cost decomposition of one candidate's predicted seconds.
 
-    Mirrors :mod:`repro.core.cost_model`: each divide/combine level costs
-    its output-element traffic * a per-element constant; the leaf stage
-    costs its flops * t_flop divided by the leaf parallelization factor
-    (paper's PF, min'd with the device count). Single-program candidates
-    have PF = 1: XLA already uses the whole device, which is what t_flop
-    measures. Element traffic that crosses the interconnect — mesh-strategy
-    resharding, combine psums, SUMMA panel broadcasts — is priced at
-    ``t_coll`` (falling back to ``t_elem`` for pre-t_coll calibrations);
-    local HBM traffic stays at ``t_elem``. Fused-leaf candidates skip the
-    last level's materialized traffic: the final divide + products +
-    combine run in VMEM, so only one read of the level-(l-1) operands and
-    one write of C is charged.
+    Returns ``{"t_flop": ..., "t_elem": ..., "t_coll": ..., "t_h2d": ...}``
+    — the seconds attributed to each calibrated constant, summing to
+    :func:`predict_seconds`. The split is what telemetry and the sweep
+    report: it shows *why* a candidate wins (compute vs local traffic vs
+    interconnect vs host<->device staging).
     """
     flops_naive = 2.0 * m * k * n
     t_coll = calib.t_coll if calib.t_coll > 0.0 else calib.t_elem
+    terms = {"t_flop": 0.0, "t_elem": 0.0, "t_coll": 0.0, "t_h2d": 0.0}
     if cand.is_naive:
         # On a mesh the naive matmul 2D-parallelizes fully (MLLib regime),
         # but pays the SUMMA panel broadcasts — the JAX analogue of MLLib's
         # 2bn^2 coGroup shuffle (paper Table I), and the term Strassen's
         # fewer leaves undercut at scale.
-        cost = flops_naive * calib.t_flop / max(device_count, 1)
+        terms["t_flop"] = flops_naive * calib.t_flop / max(device_count, 1)
         if device_count > 1:
-            cost += k * (m + n) * math.sqrt(device_count) * t_coll
-        return cost
+            terms["t_coll"] = k * (m + n) * math.sqrt(device_count) * t_coll
+        return terms
 
     rank = get_scheme(cand.scheme).n_mults
     l = cand.depth
@@ -359,10 +460,23 @@ def predict_seconds(
         elem_cost += rank ** (l - 1) * (m * k + k * n + m * n) / 4.0 ** (l - 1)
     leaf_flops = flops_naive * (rank / 8.0) ** l
 
+    if cand.kind == OOT_KIND:
+        # Out-of-core: divide/combine adds are host-side element traffic;
+        # leaf waves run sequentially on one device (PF=1) and every leaf's
+        # operands cross the host<->device boundary once each way.
+        t_h2d = calib.t_h2d if calib.t_h2d > 0.0 else calib.t_elem
+        terms["t_flop"] = leaf_flops * calib.t_flop
+        terms["t_elem"] = elem_cost * calib.t_elem
+        terms["t_h2d"] = (
+            rank**l * (m * k + k * n + m * n) / 4.0**l * t_h2d
+        )
+        return terms
+
     coll_cost = 0.0
     if cand.is_local:
         leaf_pf = 1.0
         elem_pf = 1.0
+        elem_key = "t_elem"
         t_comm = calib.t_elem
     elif cand.kind == "strassen_fused_sharded":
         # Row-parallel over every mesh axis (the strategy row-shards across
@@ -371,6 +485,7 @@ def predict_seconds(
         # row shard.
         leaf_pf = float(device_count)
         elem_pf = float(device_count)
+        elem_key = "t_elem"
         t_comm = calib.t_elem
         coll_cost = k * n * t_coll
     elif cand.kind == "strassen_2d":
@@ -379,21 +494,52 @@ def predict_seconds(
         # but divide/combine traffic reshards across the grid.
         leaf_pf = float(device_count)
         elem_pf = 1.0
+        elem_key = "t_coll"
         t_comm = t_coll
     elif cand.kind.startswith("strassen_shardmap"):
         # one explicit BFS level over the whole grid (mult times rows /
         # rb*cb axes all carry leaf work); combine is a single psum of C.
         leaf_pf = float(device_count)
         elem_pf = 1.0
+        elem_key = "t_coll"
         t_comm = t_coll
     else:  # strassen_bfs_sharded and future BFS-batch strategies
         leaf_pf = float(min(rank**l, device_count))
         elem_pf = 1.0
+        elem_key = "t_coll"
         t_comm = t_coll
-    return (
-        leaf_flops * calib.t_flop / leaf_pf
-        + elem_cost * t_comm / elem_pf
-        + coll_cost
+    terms["t_flop"] = leaf_flops * calib.t_flop / leaf_pf
+    terms[elem_key] += elem_cost * t_comm / elem_pf
+    terms["t_coll"] += coll_cost
+    return terms
+
+
+def predict_seconds(
+    cand: Candidate,
+    m: int,
+    k: int,
+    n: int,
+    calib: Calibration,
+    *,
+    device_count: int = 1,
+) -> float:
+    """Predicted wall-clock for one multiply under the calibrated model.
+
+    Mirrors :mod:`repro.core.cost_model`: each divide/combine level costs
+    its output-element traffic * a per-element constant; the leaf stage
+    costs its flops * t_flop divided by the leaf parallelization factor
+    (paper's PF, min'd with the device count). Single-program candidates
+    have PF = 1: XLA already uses the whole device, which is what t_flop
+    measures. Element traffic that crosses the interconnect — mesh-strategy
+    resharding, combine psums, SUMMA panel broadcasts — is priced at
+    ``t_coll`` (falling back to ``t_elem`` for pre-t_coll calibrations);
+    local HBM traffic stays at ``t_elem``. Fused-leaf candidates skip the
+    last level's materialized traffic. Out-of-core candidates add the
+    host<->device staging term priced at ``t_h2d``. See
+    :func:`predict_cost_terms` for the per-constant decomposition.
+    """
+    return sum(
+        predict_cost_terms(cand, m, k, n, calib, device_count=device_count).values()
     )
 
 
@@ -409,10 +555,38 @@ def execute(
     *,
     precision=None,
     mesh=None,
+    oot_budget: Optional[int] = None,
 ) -> jax.Array:
-    """Run one candidate. Raises KeyError for unknown mesh strategy names."""
+    """Run one candidate. Raises KeyError for unknown mesh strategy names.
+
+    ``strassen_oot`` candidates run the host-resident block pipeline
+    eagerly (they cannot trace under jit); ``oot_budget`` caps their
+    device bytes, defaulting to double-buffered single-leaf waves.
+    """
     if cand.is_naive:
         return jnp.matmul(a, b, precision=precision)
+    if cand.kind == OOT_KIND:
+        import numpy as np
+
+        from repro.blocks.scheduler import leaf_bytes, strassen_oot_matmul
+
+        a_h, b_h = np.asarray(a), np.asarray(b)
+        m, k = a_h.shape
+        n = b_h.shape[1]
+        dtype = np.result_type(a_h.dtype, b_h.dtype)
+        budget = oot_budget or 2 * leaf_bytes(m, k, n, cand.depth, dtype)
+        leaf_backend = None
+        if precision is not None:
+            # Thread the caller's precision into the leaf waves — measured
+            # comparisons must price every candidate at the same precision.
+            from repro.core.backend import MatmulBackend
+
+            leaf_backend = MatmulBackend(kind="auto", depth=2, precision=precision)
+        out, _ = strassen_oot_matmul(
+            a_h, b_h, depth=cand.depth, budget_bytes=budget, scheme=cand.scheme,
+            backend=leaf_backend,
+        )
+        return jnp.asarray(out)
     if cand.kind == FUSED_KIND:
         from repro.kernels.strassen.ops import strassen_matmul_fused
 
@@ -442,11 +616,24 @@ def measure_seconds(
     mesh=None,
     precision=None,
     repeats: int = 2,
+    oot_budget: Optional[int] = None,
 ) -> float:
     """Time one candidate end-to-end on device (compile excluded)."""
     ka, kb = jax.random.split(jax.random.PRNGKey(0))
     a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
     b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    if cand.kind == OOT_KIND:
+        # Host-resident pipeline: eager by construction, warmup still
+        # excludes the leaf dispatch's trace/compile cost.
+        import numpy as np
+
+        a_h, b_h = np.asarray(a), np.asarray(b)
+        return _time_best(
+            lambda: jax.block_until_ready(
+                execute(cand, a_h, b_h, precision=precision, oot_budget=oot_budget)
+            ),
+            repeats,
+        )
     fn = jax.jit(lambda x, y: execute(cand, x, y, precision=precision, mesh=mesh))
     return _time_best(lambda: jax.block_until_ready(fn(a, b)), repeats)
 
@@ -469,6 +656,7 @@ def cache_key(
     max_depth: int,
     topo: str = "local",
     site: Optional[str] = None,
+    oot_budget: Optional[int] = None,
 ) -> str:
     """``topo`` separates local from mesh resolutions: the candidate sets and
     cost models differ, so a mesh decision must never answer a local lookup
@@ -479,12 +667,19 @@ def cache_key(
     projections can hold different (measured) decisions. ``site=None``
     yields the shape-only key, which tagged lookups also fall back to in
     predicted mode (the prediction is shape-only anyway).
+
+    ``oot_budget`` keys budget-gated resolutions separately: the candidate
+    set (and the right answer) changes with the device-memory cap, and a
+    budget-free decision must never answer a budgeted lookup. ``None``
+    reproduces the historical key, so existing caches stay valid.
     """
     dt = jnp.dtype(dtype).name
     key = (
         f"{m}x{k}x{n}|{dt}|{device_kind}:{device_count}|{topo}"
         f"|{','.join(schemes)}|min{min_dim}|d{max_depth}"
     )
+    if oot_budget:
+        key += f"|oot{oot_budget}"
     if site:
         key += f"|site:{site}"
     return key
@@ -570,6 +765,10 @@ class TelemetryEvent:
     cache_hit: bool
     predicted_s: float
     measured_s: Optional[float] = None
+    # Per-constant decomposition of predicted_s (t_flop/t_elem/t_coll/t_h2d
+    # seconds, see predict_cost_terms). None on cache hits: the stored
+    # decision predates this resolution and its calibration may differ.
+    terms: Optional[Dict[str, float]] = None
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -662,6 +861,7 @@ def autotune(
     mesh=None,
     precision=None,
     site: Optional[str] = None,
+    oot_budget: Optional[int] = None,
 ) -> Decision:
     """Pick the predicted- (or measured-) fastest strategy for this shape.
 
@@ -690,6 +890,7 @@ def autotune(
         min_dim=min_dim,
         max_depth=max_depth,
         topo=topo,
+        oot_budget=oot_budget,
     )
     key = cache_key(m, k, n, dtype, site=site, **key_kwargs)
     if cache is not None:
@@ -723,7 +924,8 @@ def autotune(
 
     calib = calibration or (cache.calibration if cache else None) or get_calibration()
     cands = enumerate_candidates(
-        m, k, n, schemes=schemes, max_depth=max_depth, min_dim=min_dim, mesh=mesh
+        m, k, n, schemes=schemes, max_depth=max_depth, min_dim=min_dim, mesh=mesh,
+        oot_budget=oot_budget, dtype=dtype,
     )
     scored = sorted(
         cands,
@@ -736,7 +938,8 @@ def autotune(
         timed = [
             (
                 measure_seconds(
-                    c, m, k, n, dtype, mesh=mesh, precision=precision
+                    c, m, k, n, dtype, mesh=mesh, precision=precision,
+                    oot_budget=oot_budget,
                 ),
                 c,
             )
@@ -775,6 +978,7 @@ def autotune(
             cache_hit=False,
             predicted_s=decision.predicted_s,
             measured_s=decision.measured_s,
+            terms=predict_cost_terms(best, m, k, n, calib, device_count=device_count),
         )
     )
     return decision

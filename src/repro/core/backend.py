@@ -22,7 +22,36 @@ import jax.numpy as jnp
 
 from repro.core.strassen import strassen_matmul
 
-__all__ = ["MatmulBackend", "matmul", "NAIVE_BACKEND", "AUTO_BACKEND", "resolve_auto"]
+__all__ = [
+    "MatmulBackend",
+    "matmul",
+    "NAIVE_BACKEND",
+    "AUTO_BACKEND",
+    "resolve_auto",
+    "VALID_KINDS",
+    "EAGER_ONLY_KINDS",
+    "JIT_SAFE_KINDS",
+]
+
+# The registered routing kinds: every MatmulBackend.kind (and every CLI
+# --backend choice) must come from this tuple, so a typo fails shallowly
+# with the list of valid names instead of a deep trace-time error.
+VALID_KINDS: Tuple[str, ...] = (
+    "naive",
+    "strassen",
+    "winograd",
+    "strassen_fused",
+    "strassen_oot",
+    "auto",
+)
+
+# Kinds that cannot trace under jit (host-resident pipelines). Jitted
+# surfaces (train/serve/dryrun CLIs) derive their --backend menus as
+# VALID_KINDS minus these.
+EAGER_ONLY_KINDS: Tuple[str, ...] = ("strassen_oot",)
+JIT_SAFE_KINDS: Tuple[str, ...] = tuple(
+    k for k in VALID_KINDS if k not in EAGER_ONLY_KINDS
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,12 +59,16 @@ class MatmulBackend:
     """Configuration for routing matmuls.
 
     Attributes:
-      kind: 'naive' | 'strassen' | 'winograd' | 'strassen_fused' | 'auto'.
-        'auto' defers the choice to the calibrated cost model in
-        :mod:`repro.core.autotune`, resolved per (M, K, N, dtype) at trace
-        time and cached — so jitted call sites pay the decision once.
+      kind: one of :data:`VALID_KINDS`. 'auto' defers the choice to the
+        calibrated cost model in :mod:`repro.core.autotune`, resolved per
+        (M, K, N, dtype) at trace time and cached — so jitted call sites
+        pay the decision once. 'strassen_oot' routes through the
+        out-of-core tagged-block runtime (:mod:`repro.blocks`): host
+        operands, device bytes capped by ``device_budget`` — eager-only.
       depth: Strassen recursion depth (paper's p - q). Ignored for naive;
-        for 'auto' it is the maximum depth the tuner may pick.
+        for 'auto' it is the maximum depth the tuner may pick; for
+        'strassen_oot' it deepens automatically until a leaf fits the
+        budget.
       min_dim: minimum of (M, K, N) below which the call falls back to the
         naive matmul (the paper's leaf threshold / crossover point).
       precision: jax precision for leaf matmuls ('default' | 'highest'...).
@@ -45,6 +78,10 @@ class MatmulBackend:
       measure: 'auto' only — time the top predicted candidates on device
         instead of trusting the model (slower first trace, exact winner).
       schemes: coefficient schemes 'auto' may choose between.
+      device_budget: peak device bytes the out-of-core pipeline may use
+        ('strassen_oot', and the gate that lets 'auto' enumerate the
+        strassen_oot candidate family). None: 'strassen_oot' sizes waves
+        to double-buffered single leaves; 'auto' never picks out-of-core.
     """
 
     kind: str = "naive"
@@ -54,9 +91,21 @@ class MatmulBackend:
     tuning_cache: Optional[str] = None
     measure: bool = False
     schemes: Tuple[str, ...] = ("strassen", "winograd")
+    device_budget: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in VALID_KINDS:
+            raise ValueError(
+                f"unknown matmul backend kind {self.kind!r}; "
+                f"valid kinds: {', '.join(VALID_KINDS)}"
+            )
 
     @property
     def scheme_name(self) -> str:
+        if self.kind == "strassen_oot":
+            # The out-of-core runtime executes any scheme; resolve_auto
+            # pins the decision's scheme as the single schemes entry.
+            return self.schemes[0] if self.schemes else "strassen"
         if self.kind in ("strassen", "strassen_fused"):
             return "strassen"
         if self.kind == "winograd":
@@ -116,16 +165,69 @@ def resolve_auto(
         cache=cache,
         measure=backend.measure,
         site=site,
+        oot_budget=backend.device_budget,
     )
     if decision.kind == "naive":
         return dataclasses.replace(backend, kind="naive", measure=False)
-    if decision.kind == "strassen_fused":
+    if decision.kind in ("strassen_fused", "strassen_oot"):
+        # schemes pins scheme_name to the decision's scheme (the oot
+        # family enumerates winograd too; fused is strassen-only today).
         return dataclasses.replace(
-            backend, kind="strassen_fused", depth=decision.depth, measure=False
+            backend,
+            kind=decision.kind,
+            depth=decision.depth,
+            schemes=(decision.scheme,),
+            measure=False,
         )
     return dataclasses.replace(
         backend, kind=decision.scheme, depth=decision.depth, measure=False
     )
+
+
+def _matmul_oot(x, w, backend: MatmulBackend, lead, m: int, k: int, n: int):
+    """Route one matmul through the out-of-core tagged-block runtime.
+
+    Host-resident by construction: the operands are pulled to host, the
+    scheduler stages leaf waves through device memory under
+    ``backend.device_budget``, and the result returns as a jax array. A
+    tracer here means the caller jitted the surrounding computation —
+    impossible to honor (the pipeline IS the staging loop), so fail with
+    the fix rather than a deep trace error.
+    """
+    import numpy as np
+
+    from repro.blocks.scheduler import (
+        leaf_bytes,
+        min_depth_for_budget,
+        strassen_oot_matmul,
+    )
+
+    if isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+        raise ValueError(
+            "kind='strassen_oot' is a host-resident out-of-core pipeline and "
+            "cannot run under jit; call it eagerly (launch/blocks_demo.py) or "
+            "use kind='auto' without device_budget inside jitted code"
+        )
+    x_h = np.asarray(x).reshape(m, k)
+    w_h = np.asarray(w)
+    dtype = np.result_type(x_h.dtype, w_h.dtype)
+    depth = max(backend.depth, 1)
+    budget = backend.device_budget or 2 * leaf_bytes(m, k, n, depth, dtype)
+    # Deepen until one leaf fits the budget (the scheduler would refuse).
+    if leaf_bytes(m, k, n, depth, dtype) > budget:
+        depth = min_depth_for_budget(m, k, n, budget, dtype)
+    leaf_backend = MatmulBackend(
+        kind="auto", depth=2, min_dim=backend.min_dim, precision=backend.precision
+    )
+    out, _ = strassen_oot_matmul(
+        x_h,
+        w_h,
+        depth=depth,
+        budget_bytes=budget,
+        scheme=backend.scheme_name,
+        backend=leaf_backend,
+    )
+    return jnp.asarray(out).reshape(*lead, n)
 
 
 def matmul(
@@ -164,7 +266,18 @@ def matmul(
         m *= d
 
     if backend.kind == "auto":
+        if backend.device_budget is not None and (
+            isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer)
+        ):
+            # Under jit the eager-only out-of-core family is infeasible in
+            # context: resolve without the budget so the decision (which
+            # caches per shape) can never name a plan this call site
+            # cannot execute.
+            backend = dataclasses.replace(backend, device_budget=None)
         backend = resolve_auto(m, k, n, jnp.result_type(x, w).name, backend, site)
+
+    if backend.kind == "strassen_oot":
+        return _matmul_oot(x, w, backend, lead, m, k, n)
 
     depth = backend.effective_depth(m, k, n) if backend.kind != "naive" else 0
     if depth == 0:

@@ -32,7 +32,7 @@ from typing import Any, Dict, Optional
 import jax
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, skip_reason
-from repro.core.backend import MatmulBackend
+from repro.core.backend import JIT_SAFE_KINDS, MatmulBackend
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import model_flops, roofline_terms
@@ -266,9 +266,12 @@ def main():
     ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
     ap.add_argument(
         "--backend",
-        choices=["naive", "strassen", "winograd", "strassen_fused", "auto"],
-        help="matmul routing; 'auto' resolves per shape from the calibrated "
-        "cost model at trace time (--depth becomes the max depth)",
+        # Every dry-run cell is lowered under jit: only the jit-safe
+        # registered kinds.
+        choices=list(JIT_SAFE_KINDS),
+        help="matmul routing, validated against the registered kinds; "
+        "'auto' resolves per shape from the calibrated cost model at "
+        "trace time (--depth becomes the max depth)",
     )
     ap.add_argument("--depth", type=int, default=1)
     ap.add_argument("--min-dim", type=int, default=2048)

@@ -18,6 +18,7 @@ import time
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.backend import JIT_SAFE_KINDS, MatmulBackend
 from repro.launch.mesh import make_mesh_for
 from repro.launch.specs import param_logical_axes, sharding_tree
 from repro.models import model as M
@@ -27,6 +28,8 @@ from repro.serving.engine import Engine, ServeConfig
 
 
 def main():
+    import dataclasses
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="phi4_mini_3_8b")
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -39,9 +42,28 @@ def main():
     ap.add_argument("--mesh", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend",
+        # prefill/decode are jitted: only the jit-safe registered kinds.
+        choices=list(JIT_SAFE_KINDS),
+        default=None,
+        help="matmul routing, validated against the registered kinds; "
+        "'auto' turns on the autotune dispatcher for every projection",
+    )
+    ap.add_argument("--strassen-depth", type=int, default=1)
+    ap.add_argument("--strassen-min-dim", type=int, default=1024)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.backend:
+        cfg = dataclasses.replace(
+            cfg,
+            matmul_backend=MatmulBackend(
+                kind=args.backend,
+                depth=max(args.strassen_depth, 1),
+                min_dim=args.strassen_min_dim,
+            ),
+        )
     key = jax.random.PRNGKey(args.seed)
 
     mesh = None

@@ -79,7 +79,14 @@ def train_loop(
     save_every=50,
     log_every=10,
     seed=0,
+    stats_out=None,
 ):
+    """Run the training loop; returns (state, loss history).
+
+    ``stats_out``: optional dict filled with run measurements
+    (median_step_time_s, steps_run) — the step-time evidence the summary
+    JSON and the autotune-vs-hand-picked comparison report.
+    """
     state, data, jitted = build(
         cfg, opt_cfg, batch=batch, seq=seq, accum=accum, mesh=mesh, seed=seed
     )
@@ -116,6 +123,9 @@ def train_loop(
                 print("[straggler] sustained slowdown — checkpoint + restart advised")
                 if mgr:
                     mgr.maybe_save(state, step_i + 1, extra={"straggler": True})
+    if stats_out is not None:
+        stats_out["median_step_time_s"] = watchdog.median_step_time
+        stats_out["steps_run"] = steps - start
     return state, history
 
 
@@ -124,7 +134,48 @@ def _null():
     yield
 
 
+def autotune_step_delta(
+    baseline_cfg,
+    opt_cfg,
+    *,
+    auto_step_time,
+    steps,
+    batch,
+    seq,
+    accum=1,
+    mesh=None,
+):
+    """Measure the autotuned-vs-hand-picked step-time delta (ROADMAP item).
+
+    Runs a short baseline segment on ``baseline_cfg`` (the hand-picked
+    backend; same shapes, no checkpointing) and returns the summary-JSON
+    fields: step_time_handpicked_s, step_time_delta_s and — when the
+    baseline measured — step_time_delta_pct. Use enough ``steps`` that the
+    median is not dominated by the compile step.
+    """
+    base_stats = {}
+    train_loop(
+        baseline_cfg, opt_cfg,
+        steps=steps, batch=batch, seq=seq, accum=accum, mesh=mesh,
+        ckpt_dir=None, log_every=max(steps, 1), stats_out=base_stats,
+    )
+    base_t = base_stats.get("median_step_time_s", 0.0)
+    out = {
+        "step_time_handpicked_s": base_t,
+        "step_time_delta_s": auto_step_time - base_t,
+    }
+    if base_t:
+        out["step_time_delta_pct"] = 100.0 * (auto_step_time - base_t) / base_t
+    print(
+        f"[autotune] step time {auto_step_time*1e3:.1f} ms vs hand-picked "
+        f"{base_t*1e3:.1f} ms ({out.get('step_time_delta_pct', 0.0):+.1f}%)"
+    )
+    return out
+
+
 def main():
+    from repro.core.backend import JIT_SAFE_KINDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
     ap.add_argument("--smoke", action="store_true", help="use the reduced config")
@@ -139,17 +190,40 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument(
         "--backend",
-        choices=["naive", "strassen", "winograd", "strassen_fused", "auto"],
+        # The train step is jitted: only the jit-safe registered kinds
+        # (use repro.launch.blocks_demo for the out-of-core surface).
+        choices=list(JIT_SAFE_KINDS),
         default="naive",
-        help="matmul routing; 'auto' defers to the calibrated autotune "
-        "dispatcher (--strassen-depth becomes the max depth it may pick)",
+        help="matmul routing, validated against the registered kinds; "
+        "'auto' sets matmul_autotune=True so every dense projection "
+        "resolves from the calibrated dispatcher (--strassen-depth "
+        "becomes the max depth it may pick)",
     )
     ap.add_argument("--strassen-depth", type=int, default=1)
     ap.add_argument("--strassen-min-dim", type=int, default=1024)
+    ap.add_argument(
+        "--compare-steps", type=int, default=0,
+        help="with --backend auto: also run this many steps on the "
+        "hand-picked (config default) backend and record the measured "
+        "step-time delta in the summary JSON",
+    )
+    ap.add_argument("--summary-out", default=None,
+                    help="write a run-summary JSON (loss, step time, "
+                    "backend, autotune telemetry) here")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.backend != "naive":
+    baseline_cfg = cfg  # the hand-picked backend, for --compare-steps
+    if args.backend == "auto":
+        cfg = dataclasses.replace(
+            cfg,
+            matmul_autotune=True,
+            matmul_backend=MatmulBackend(
+                kind="auto", depth=max(args.strassen_depth, 1),
+                min_dim=args.strassen_min_dim,
+            ),
+        )
+    elif args.backend != "naive":
         cfg = dataclasses.replace(
             cfg,
             matmul_backend=MatmulBackend(
@@ -163,14 +237,48 @@ def main():
         print(f"mesh: {dict(mesh.shape)}")
 
     per_host = shard_for_host(args.batch)
+    run_stats = {}
     t0 = time.time()
     _, history = train_loop(
         cfg, opt_cfg,
         steps=args.steps, batch=per_host, seq=args.seq, accum=args.accum,
         mesh=mesh, ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+        stats_out=run_stats,
     )
     dt = time.time() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s; loss {history[0]:.3f} -> {history[-1]:.3f}")
+
+    summary = {
+        "arch": args.arch,
+        "backend": args.backend,
+        "steps": args.steps,
+        "wall_s": dt,
+        "loss_first": history[0],
+        "loss_last": history[-1],
+        **run_stats,
+    }
+    if args.backend == "auto":
+        from repro.core import autotune
+
+        summary["autotune"] = {
+            "kinds": autotune.get_telemetry().kind_counts(),
+            "calibration": autotune.calibration_snapshot(),
+        }
+        if args.compare_steps > 0:
+            summary.update(
+                autotune_step_delta(
+                    baseline_cfg, opt_cfg,
+                    auto_step_time=run_stats.get("median_step_time_s", 0.0),
+                    steps=args.compare_steps, batch=per_host, seq=args.seq,
+                    accum=args.accum, mesh=mesh,
+                )
+            )
+    if args.summary_out:
+        import json
+
+        with open(args.summary_out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {args.summary_out}")
 
 
 if __name__ == "__main__":

@@ -138,6 +138,15 @@ class Engine:
         return tokens, stats
 
     def autotune_stats(self) -> Dict:
-        """Full autotune telemetry snapshot: cache hit/miss counters, chosen
-        kind per trace, and predicted-vs-measured seconds per decision."""
-        return autotune.get_telemetry().snapshot()
+        """Full autotune telemetry snapshot plus the calibration it ran on.
+
+        Each fresh decision carries its per-constant cost split under
+        ``terms`` (t_flop/t_elem/t_coll seconds, and t_h2d for the
+        out-of-core ``strassen_oot`` family); ``calibration`` reports the
+        fitted constants themselves (None when every decision came from a
+        warm cache and no calibration ever ran).
+        """
+        return {
+            **autotune.get_telemetry().snapshot(),
+            "calibration": autotune.calibration_snapshot(),
+        }
