@@ -13,15 +13,23 @@ Full run (paper-scale; hours on CPU hosts, real-TPU recommended):
     PYTHONPATH=src python benchmarks/fig8_scaling.py \
         [--sizes 2048,4096,8192,16384] [--budget-mb 64] [--store memmap]
 
+Every (size, strategy) sample is steady-state: one full untimed warmup
+run per size pays the leaf jit compile and the autotune
+``get_calibration()`` micro-benchmarks before the timed run starts.
+
 CI smoke mode — bf16, an artificially small budget that forces >= 2
-staging waves, and a parity gate:
+staging waves, a parity gate, and the async-pipeline gates:
 
     PYTHONPATH=src python benchmarks/fig8_scaling.py --smoke
 
-``--smoke`` EXITS NON-ZERO if any size's out-of-core result drifts more
-than 1e-2 from the dense bf16 matmul, if the staging plan degenerates to
-a single wave (the budget failed to force out-of-core behavior), or if
-no size exceeds the device budget.
+``--smoke`` also times the synchronous (``prefetch=False``) loop per
+size and reports ``overlap_speedup``. It EXITS NON-ZERO if any size's
+out-of-core result drifts more than 1e-2 from the dense bf16 matmul, if
+the staging plan degenerates to a single wave (the budget failed to
+force out-of-core behavior), if no size exceeds the device budget, if
+any multi-wave pipelined run fails to report ``overlap_efficiency > 0``
+(with per-wave timestamps), or if ``peak_device_bytes`` exceeds the
+budget.
 """
 from __future__ import annotations
 
@@ -61,9 +69,17 @@ def sweep(
     store="dict",
     depth=0,
     parity_max=4096,
+    compare_sync=False,
     out_path="fig8_scaling.json",
 ):
-    """Run the wall-clock-vs-size table; returns the JSON payload."""
+    """Run the wall-clock-vs-size table; returns the JSON payload.
+
+    Each size pays one full untimed warmup run first — leaf jit compile
+    and the autotuner's ``get_calibration()`` micro-benchmarks land
+    there, never in the reported sample. ``compare_sync`` additionally
+    times the synchronous (``prefetch=False``) loop per size so the row
+    carries ``sync_s`` and ``overlap_speedup``.
+    """
     import numpy as np
 
     from benchmarks.common import emit
@@ -88,9 +104,20 @@ def sweep(
         # "Fits on device" the way a dense multiply would need it:
         # both operands plus the product resident at once.
         fits = 3 * a.nbytes <= budget_bytes
-        d = depth or min_depth_for_budget(n, n, n, max(budget_bytes // 2, 1), np_dtype)
-        out, stats = strassen_oot_matmul(
-            a, b, depth=d, budget_bytes=budget_bytes, backend=backend, store=store
+        # pipelined=True: pick the depth whose 2x leaf slot fits, so the
+        # async pipeline stays enabled instead of degrading to sync.
+        d = depth or min_depth_for_budget(
+            n, n, n, budget_bytes, np_dtype, pipelined=True
+        )
+        kwargs = dict(depth=d, budget_bytes=budget_bytes, backend=backend, store=store)
+        # Untimed warmup: first call compiles the leaf matmul and runs the
+        # calibration micro-benchmarks; the same leaf shape serves the
+        # timed pipelined AND synchronous runs below.
+        strassen_oot_matmul(a, b, **kwargs)
+        repeats = 2 if compare_sync else 1
+        out, stats = min(
+            (strassen_oot_matmul(a, b, **kwargs) for _ in range(repeats)),
+            key=lambda r: r[1].total_s,
         )
         row = {
             "n": n,
@@ -99,6 +126,7 @@ def sweep(
             "leaves": stats.leaves,
             "waves": stats.waves,
             "wave_size": stats.wave_size,
+            "prefetch": stats.prefetch,
             "fits_on_device": fits,
             "budget_bytes": budget_bytes,
             "peak_device_bytes": stats.peak_device_bytes,
@@ -107,11 +135,30 @@ def sweep(
             "divide_s": stats.divide_s,
             "leaf_s": stats.leaf_s,
             "combine_s": stats.combine_s,
+            "stage_s": stats.stage_s,
+            "fetch_s": stats.fetch_s,
+            "overlap_efficiency": stats.overlap_efficiency,
+            "wave_events": stats.wave_events,
             "h2d_bytes": stats.h2d_bytes,
+            "sync_s": None,
+            "overlap_speedup": None,
             "dense_s": None,
             "rel_err": None,
             "ok": None,
         }
+        if compare_sync:
+            out_sync, stats_sync = min(
+                (
+                    strassen_oot_matmul(a, b, prefetch=False, **kwargs)
+                    for _ in range(repeats)
+                ),
+                key=lambda r: r[1].total_s,
+            )
+            assert np.array_equal(
+                np.asarray(out, np.float32), np.asarray(out_sync, np.float32)
+            ), f"pipelined vs sync mismatch at n={n}"
+            row["sync_s"] = stats_sync.total_s
+            row["overlap_speedup"] = stats_sync.total_s / stats.total_s
         if n <= parity_max:
             want, dense_s = _dense_seconds(a, b)
             want = np.asarray(want).astype(np.float32)
@@ -124,6 +171,7 @@ def sweep(
         emit(
             f"fig8s/{np_dtype.name}/n{n}", stats.total_s,
             f"depth={d};waves={stats.waves};fits={fits};"
+            f"overlap={stats.overlap_efficiency:.2f};"
             f"err={row['rel_err'] if row['rel_err'] is not None else 'n/a'}",
         )
 
@@ -173,7 +221,8 @@ def main():
     if args.smoke:
         payload = sweep(
             SMOKE_SIZES, budget_bytes=SMOKE_BUDGET, dtype="bfloat16",
-            store=args.store, parity_max=max(SMOKE_SIZES), out_path=args.out,
+            store=args.store, parity_max=max(SMOKE_SIZES), compare_sync=True,
+            out_path=args.out,
         )
     else:
         payload = sweep(
@@ -184,12 +233,14 @@ def main():
         )
 
     print(f"# {'n':>7} {'depth':>5} {'waves':>5} {'fits':>5} "
-          f"{'oot_s':>9} {'dense_s':>9} {'rel_err':>9}")
+          f"{'oot_s':>9} {'sync_s':>9} {'overlap':>7} {'dense_s':>9} {'rel_err':>9}")
     for r in payload["rows"]:
         dense = f"{r['dense_s']:.4f}" if r["dense_s"] is not None else "-"
         err = f"{r['rel_err']:.2e}" if r["rel_err"] is not None else "-"
+        sync = f"{r['sync_s']:.4f}" if r["sync_s"] is not None else "-"
         print(f"# {r['n']:>7} {r['depth']:>5} {r['waves']:>5} "
-              f"{str(r['fits_on_device']):>5} {r['oot_s']:>9.4f} {dense:>9} {err:>9}")
+              f"{str(r['fits_on_device']):>5} {r['oot_s']:>9.4f} {sync:>9} "
+              f"{r['overlap_efficiency']:>7.2f} {dense:>9} {err:>9}")
 
     if args.smoke:
         bad = [r for r in payload["rows"] if r["ok"] is False]
@@ -203,9 +254,37 @@ def main():
         if not any(not r["fits_on_device"] for r in payload["rows"]):
             print("# SMOKE FAIL: no size exceeded the device budget")
             sys.exit(1)
+        # Async-pipeline gates: every multi-wave pipelined run must report
+        # positive overlap with per-wave timestamps, and the modeled
+        # pipelined peak must stay inside the budget.
+        no_overlap = [
+            r for r in payload["rows"]
+            if r["prefetch"] and r["waves"] >= 2
+            and not (r["overlap_efficiency"] > 0.0 and r["wave_events"])
+        ]
+        if no_overlap:
+            print(f"# SMOKE FAIL: pipelined multi-wave rows without overlap "
+                  f"telemetry: {[r['n'] for r in no_overlap]}")
+            sys.exit(1)
+        over = [
+            r for r in payload["rows"]
+            if r["peak_device_bytes"] > r["budget_bytes"]
+        ]
+        if over:
+            print(f"# SMOKE FAIL: peak device bytes exceeded the budget: "
+                  f"{[(r['n'], r['peak_device_bytes']) for r in over]}")
+            sys.exit(1)
+        if not any(r["prefetch"] for r in payload["rows"]):
+            print("# SMOKE FAIL: no size ran the async pipeline")
+            sys.exit(1)
         top = payload["rows"][-1]
+        speedups = ", ".join(
+            f"n={r['n']}: {r['overlap_speedup']:.2f}x"
+            for r in payload["rows"] if r["overlap_speedup"] is not None
+        )
         print(f"# smoke ok: n={top['n']} ran {top['waves']} waves under a "
-              f"{payload['budget_bytes']} B budget (operand {top['operand_bytes']} B)")
+              f"{payload['budget_bytes']} B budget (operand {top['operand_bytes']} B); "
+              f"pipelined-vs-sync speedup [{speedups}]")
 
 
 if __name__ == "__main__":

@@ -9,13 +9,21 @@ host/device memory hierarchy instead of a Spark cluster:
   streaming block-by-block through the :class:`~repro.blocks.blockmatrix
   .BlockStore`, so host working set is O(block), not O(matrix).
 * **leaf** — the 7^q leaf products are batched into *waves* sized so that
-  (current wave operands + products + prefetched next-wave operands) fit a
-  configurable device-memory budget. Each wave is staged with
-  ``jax.device_put`` and dispatched through the standard
-  :func:`repro.core.backend.matmul` routing (``kind="auto"`` by default,
-  so the calibrated dispatcher picks naive/Strassen/fused per leaf shape);
-  the next wave's operands are put on device while the current wave
-  computes — double buffering, JAX's async dispatch does the overlap.
+  (current wave operands + products + prefetched next-wave operands +
+  the previous wave's not-yet-fetched products) fit a configurable
+  device-memory budget. The wave loop is a 2-deep asynchronous pipeline
+  keyed off JAX's async dispatch: wave k's products are left in flight
+  while wave k+1's operands are ``jax.device_put`` and its multiplies
+  dispatched, and the only blocking fence is the explicit
+  ``jax.block_until_ready`` at each wave's D2H fetch — so H2D staging,
+  leaf compute, and D2H drain of adjacent waves all overlap (the paper's
+  Spark pipeline keeping all 7^q multiplies busy, JAMPI's
+  shuffle-to-overlapped-transfer move re-targeted at the host<->device
+  boundary). Fetched product buffers are released ("donated" into the
+  host-side combine accumulation) the moment their bytes land on host,
+  so peak device bytes stay inside the budget including in-flight
+  prefetch. Per-wave issue/dispatch/fetch timestamps land in
+  :class:`OotStats.wave_events` and derive ``overlap_efficiency``.
 * **combine** — level-order bottom-up signed sums of the seven child
   products into each parent's quadrants (Stark's combine stage), again
   host-side and block-streaming; child nodes are freed as soon as their
@@ -43,6 +51,8 @@ __all__ = [
     "strassen_oot_matmul",
     "leaf_bytes",
     "min_depth_for_budget",
+    "recent_oot_stats",
+    "reset_oot_stats",
 ]
 
 
@@ -69,26 +79,52 @@ def leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
 
 
 def min_depth_for_budget(
-    m: int, k: int, n: int, budget_bytes: int, dtype, max_depth: int = 12
+    m: int,
+    k: int,
+    n: int,
+    budget_bytes: int,
+    dtype,
+    max_depth: int = 12,
+    *,
+    pipelined: bool = False,
 ) -> int:
-    """Smallest recursion depth whose single leaf fits the device budget.
+    """Smallest recursion depth whose leaf working set fits the budget.
 
-    The scheduler needs at least one leaf's (A, B, C) resident; callers
-    wanting double-buffered waves should leave ~2x headroom (or pass one
-    level deeper).
+    ``pipelined=False`` (feasibility): one leaf's (A, B, C) resident — the
+    scheduler can always run, degrading to un-prefetched single-leaf waves.
+    ``pipelined=True`` (the async wave pipeline's peak): a leaf slot plus
+    its in-flight neighbours — next-wave (A, B) prefetch and the previous
+    wave's un-fetched C — i.e. ``2 * leaf_bytes``; depths chosen this way
+    keep the 2-deep pipeline enabled instead of silently falling back to
+    synchronous staging.
     """
+    need = 2 if pipelined else 1
     for depth in range(1, max_depth + 1):
-        if leaf_bytes(m, k, n, depth, dtype) <= budget_bytes:
+        if need * leaf_bytes(m, k, n, depth, dtype) <= budget_bytes:
             return depth
     raise ValueError(
         f"no depth <= {max_depth} fits ({m}x{k}x{n}, {np.dtype(dtype).name}) "
         f"leaves into {budget_bytes} bytes"
+        + (" with pipeline headroom" if pipelined else "")
     )
 
 
 @dataclasses.dataclass
 class OotStats:
-    """Execution telemetry for one out-of-core multiply."""
+    """Execution telemetry for one out-of-core multiply.
+
+    ``wave_events`` holds one record per staging wave with timestamps
+    (seconds since the run started) for the pipeline's three async phases:
+    ``issue_start``/``issue_end`` (host->device operand staging),
+    ``dispatch_end`` (leaf multiplies issued, not fenced), and
+    ``fetch_start``/``fetch_end`` (the D2H ``block_until_ready`` fence +
+    host combine write). ``overlap_efficiency`` derives from them: the
+    fraction of total transfer time (staging + fetch) issued while another
+    wave's compute was in flight — with the 2-deep pipeline only the first
+    wave's staging and the last wave's fetch are exposed, so any forced
+    multi-wave run reports a strictly positive value; a synchronous run
+    (``prefetch=False``) reports 0.0.
+    """
 
     m: int
     k: int
@@ -110,9 +146,60 @@ class OotStats:
     leaf_s: float = 0.0
     combine_s: float = 0.0
     total_s: float = 0.0
+    stage_s: float = 0.0
+    fetch_s: float = 0.0
+    overlap_efficiency: float = 0.0
+    wave_events: List[dict] = dataclasses.field(default_factory=list)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def assert_within_budget(self) -> None:
+        """Raise if the modeled pipelined peak exceeded the device budget."""
+        if self.peak_device_bytes > self.budget_bytes:
+            raise AssertionError(
+                f"peak device bytes {self.peak_device_bytes} exceeded the "
+                f"budget {self.budget_bytes} (waves={self.waves}, "
+                f"wave_size={self.wave_size}, prefetch={self.prefetch})"
+            )
+
+    def finalize_overlap(self) -> None:
+        """Derive ``overlap_efficiency`` from the per-wave timestamps."""
+        total = sum(
+            (e["issue_end"] - e["issue_start"]) + (e["fetch_end"] - e["fetch_start"])
+            for e in self.wave_events
+        )
+        if not self.prefetch or len(self.wave_events) < 2 or total <= 0.0:
+            self.overlap_efficiency = 0.0
+            return
+        first, last = self.wave_events[0], self.wave_events[-1]
+        exposed = (first["issue_end"] - first["issue_start"]) + (
+            last["fetch_end"] - last["fetch_start"]
+        )
+        self.overlap_efficiency = max(0.0, min(1.0, 1.0 - exposed / total))
+
+
+# Ring of the most recent OotStats (as dicts) this process produced —
+# the out-of-core analogue of autotune's decision telemetry, surfaced by
+# ``Engine.autotune_stats()`` and the benchmarks. Bounded so a long
+# sweep cannot grow host memory.
+_RECENT_STATS: List[dict] = []
+_RECENT_STATS_MAX = 64
+
+
+def recent_oot_stats() -> List[dict]:
+    """Stats dicts of this process's recent out-of-core runs (oldest first)."""
+    return list(_RECENT_STATS)
+
+
+def reset_oot_stats() -> None:
+    _RECENT_STATS.clear()
+
+
+def _record_run(stats: OotStats) -> None:
+    _RECENT_STATS.append(stats.to_dict())
+    if len(_RECENT_STATS) > _RECENT_STATS_MAX:
+        del _RECENT_STATS[: len(_RECENT_STATS) - _RECENT_STATS_MAX]
 
 
 class StrassenScheduler:
@@ -129,9 +216,12 @@ class StrassenScheduler:
         registered mesh strategy a future resolve chooses).
       block: target block side for the store partition; ``None`` stores
         one block per leaf operand (the coarsest legal grain).
-      prefetch: double-buffer the next wave's host->device staging while
-        the current wave computes. Automatically disabled when the budget
-        only fits a single un-prefetched wave.
+      prefetch: run the leaf waves as a 2-deep asynchronous pipeline —
+        wave k+1's host->device staging and dispatch are issued while
+        wave k's products are still in flight, and the only blocking
+        fence is each wave's D2H fetch. Automatically disabled (fully
+        synchronous stage -> compute -> fetch per wave) when the budget
+        cannot hold a pipelined slot (2x one leaf's working set).
       stage_dtype: dtype of the staged leaf operands (and so of the leaf
         multiply). ``None`` — the default — stages in the accumulation
         dtype (f32 for bf16 inputs): operand combos never round until the
@@ -166,6 +256,10 @@ class StrassenScheduler:
             from repro.core.backend import MatmulBackend
 
             backend = MatmulBackend(kind="auto", depth=2, min_dim=1024)
+        # Apply the backend's process-level knobs (XLA latency-hiding /
+        # async-collective flags) once, here — not per leaf call site.
+        if hasattr(backend, "configure"):
+            backend.configure()
         self.backend = backend
 
     # ------------------------------------------------------------ internals
@@ -296,9 +390,17 @@ class StrassenScheduler:
         )
         itemsize = stage_dtype.itemsize
         in_bytes = (lm * lk + lk * ln) * itemsize
-        per_leaf = in_bytes + lm * ln * itemsize
+        out_bytes = lm * ln * itemsize
+        per_leaf = in_bytes + out_bytes
+        # Pipelined wave slot: the 2-deep pipeline keeps, per leaf slot, the
+        # current wave's full working set (A + B + C) plus its in-flight
+        # neighbours — the next wave's prefetched operands (A + B) and the
+        # previous wave's not-yet-fetched products (C) — concurrently
+        # resident, i.e. exactly 2x one leaf. Sizing waves at that slot
+        # makes the budget bound hold at the *pipelined* peak, not just the
+        # quiescent single-wave state.
         prefetch = self.prefetch
-        wave_size = self.budget_bytes // (per_leaf + in_bytes) if prefetch else 0
+        wave_size = self.budget_bytes // (2 * per_leaf) if prefetch else 0
         if wave_size < 1:
             prefetch = False
             wave_size = self.budget_bytes // per_leaf
@@ -324,6 +426,10 @@ class StrassenScheduler:
         # caller-provided BlockStore instances stay open for inspection.
         owned_store = not isinstance(store, BlockStore)
         store = make_store(store, slot_bytes=slot_bytes, root=store_root)
+        # Device arrays in flight per wave index — defined out here so the
+        # failure path below can release them even when the exception's
+        # traceback keeps the frame (and so these references) alive.
+        in_flight: dict = {}
         try:
 
             leaves = rank**depth
@@ -373,47 +479,59 @@ class StrassenScheduler:
             stats.divide_s = time.perf_counter() - t0
             stats.host_store_peak_bytes = max(stats.host_store_peak_bytes, store.nbytes())
 
-            # --- leaf waves: stage -> dispatch -> (prefetch next) -> fetch.
+            # --- leaf waves: a 2-deep async pipeline over stage -> dispatch
+            # -> fetch. Iteration k issues wave k's leaf multiplies (async
+            # JAX dispatch), stages wave k+1's operands (async device_put)
+            # while wave k computes, and only THEN drains wave k-1 — so the
+            # pipeline's one blocking fence (block_until_ready at D2H)
+            # overlaps the in-flight compute instead of serializing behind
+            # it. Fetched product buffers are released the moment their
+            # bytes land on host (donated into the host-side combine
+            # accumulation), keeping the device peak at the budgeted
+            # pipelined slot.
             t0 = time.perf_counter()
             leaf_list = list(tags.leaf_paths(depth, rank))
             waves: List[List[Tuple[int, ...]]] = [
                 leaf_list[i : i + wave_size] for i in range(0, leaves, wave_size)
             ]
+            events = [{"wave": i, "size": len(w)} for i, w in enumerate(waves)]
 
-            def stage(wave: List[Tuple[int, ...]]):
+            def now() -> float:
+                return time.perf_counter() - t_start
+
+            def stage(w_idx: int):
+                event = events[w_idx]
+                event["issue_start"] = now()
                 staged = []
-                for path in wave:
+                refs = in_flight.setdefault(w_idx, [])
+                for path in waves[w_idx]:
                     na = self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype)
                     nb = self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype)
                     # Any rounding to a narrower staging dtype happens here, at
                     # the host->device boundary — never mid-chain.
-                    staged.append(
-                        (
-                            path,
-                            jax.device_put(na.to_dense().astype(stage_dtype, copy=False)),
-                            jax.device_put(nb.to_dense().astype(stage_dtype, copy=False)),
-                        )
-                    )
+                    a_dev = jax.device_put(na.to_dense().astype(stage_dtype, copy=False))
+                    b_dev = jax.device_put(nb.to_dense().astype(stage_dtype, copy=False))
+                    refs.extend((a_dev, b_dev))
+                    staged.append((path, a_dev, b_dev))
                     stats.h2d_bytes += in_bytes
+                event["issue_end"] = now()
+                stats.stage_s += event["issue_end"] - event["issue_start"]
                 return staged
 
-            staged = stage(waves[0]) if waves else []
-            for w_idx, wave in enumerate(waves):
-                current, staged = staged, None
-                if current is None:  # prefetch off: stage synchronously
-                    current = stage(wave)
+            def dispatch(w_idx: int, staged):
                 outs = [
                     (path, self._leaf_matmul(a_dev, b_dev))
-                    for path, a_dev, b_dev in current
+                    for path, a_dev, b_dev in staged
                 ]
-                nxt = waves[w_idx + 1] if w_idx + 1 < len(waves) else None
-                device_now = len(wave) * per_leaf
-                if prefetch and nxt is not None:
-                    # Async H2D of the next wave overlaps the current compute.
-                    staged = stage(nxt)
-                    device_now += len(nxt) * in_bytes
-                stats.peak_device_bytes = max(stats.peak_device_bytes, device_now)
+                in_flight[w_idx].extend(out for _, out in outs)
+                events[w_idx]["dispatch_end"] = now()
+                return outs
+
+            def drain(w_idx: int, outs):
+                event = events[w_idx]
+                event["fetch_start"] = now()
                 for path, out in outs:
+                    out = jax.block_until_ready(out)  # the pipeline's only fence
                     host = np.asarray(out)
                     stats.d2h_bytes += host.nbytes
                     host = host.astype(acc_dtype, copy=False)
@@ -426,14 +544,52 @@ class StrassenScheduler:
                             )
                     self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype).free()
                     self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype).free()
-                # Drop this wave's device references before the next wave
-                # dispatches: the fetched product buffers would otherwise stay
-                # resident through the next compute and break the budget bound.
-                current = outs = None
+                # Drop the wave's device references (operands were consumed
+                # by the leaf multiplies; products are now on host) so the
+                # buffers free without waiting for this host loop or GC.
+                in_flight.pop(w_idx, None)
+                event["fetch_end"] = now()
+                stats.fetch_s += event["fetch_end"] - event["fetch_start"]
                 stats.waves += 1
                 stats.host_store_peak_bytes = max(
                     stats.host_store_peak_bytes, store.nbytes()
                 )
+
+            pending: Optional[Tuple[int, list]] = None
+            staged = stage(0) if (prefetch and waves) else None
+            for w_idx, wave in enumerate(waves):
+                current, staged = staged, None
+                if current is None:  # prefetch off: stage synchronously
+                    current = stage(w_idx)
+                outs = dispatch(w_idx, current)
+                current = None
+                # Modeled concurrent peak this iteration: wave k's working
+                # set + the previous wave's un-fetched products + the next
+                # wave's prefetched operands.
+                device_now = len(wave) * per_leaf
+                if pending is not None:
+                    device_now += len(pending[1]) * out_bytes
+                if prefetch and w_idx + 1 < len(waves):
+                    device_now += len(waves[w_idx + 1]) * in_bytes
+                stats.peak_device_bytes = max(stats.peak_device_bytes, device_now)
+                if prefetch and w_idx + 1 < len(waves):
+                    # Stage the next wave's H2D while this wave's multiplies
+                    # run behind JAX's async dispatch — the staging calls'
+                    # host-side overhead executes on this thread while XLA's
+                    # worker pool computes wave k.
+                    staged = stage(w_idx + 1)
+                if pending is not None:
+                    # D2H fence for wave k-1 while wave k is still in flight.
+                    drain(*pending)
+                    pending = None
+                if prefetch:
+                    pending = (w_idx, outs)
+                else:
+                    drain(w_idx, outs)
+                outs = None
+            if pending is not None:
+                drain(*pending)
+            stats.wave_events = events
             stats.leaf_s = time.perf_counter() - t0
 
             # --- combine: level-order bottom-up, freeing children as we go.
@@ -463,10 +619,34 @@ class StrassenScheduler:
             a_root.free()
             b_root.free()
             c_root.free()
+        except BaseException:
+            # A failing leaf matmul (or store error) mid-pipeline must not
+            # leak the run's artifacts. Release the in-flight device
+            # buffers eagerly — the raised exception's traceback pins this
+            # frame, so dropping the dict alone would keep them alive as
+            # long as the caller holds the exception — and, for
+            # caller-provided stores the finally below will NOT close,
+            # drop every block this run created (all the run's tags start
+            # with "A:"/"B:"/"C:", memmap spill files included).
+            for refs in in_flight.values():
+                for buf in refs:
+                    try:
+                        buf.delete()
+                    except Exception:
+                        pass
+            in_flight.clear()
+            if not owned_store:
+                for key in [
+                    kk for kk in store.keys() if kk[2][:2] in ("A:", "B:", "C:")
+                ]:
+                    store.delete(key)
+            raise
         finally:
             if owned_store:
                 store.close()
         stats.total_s = time.perf_counter() - t_start
+        stats.finalize_overlap()
+        _record_run(stats)
         return result, stats
 
 

@@ -76,6 +76,7 @@ __all__ = [
     "get_calibration",
     "calibration_snapshot",
     "get_telemetry",
+    "reset_telemetry",
     "enumerate_candidates",
     "predict_seconds",
     "predict_cost_terms",
@@ -96,6 +97,13 @@ FUSED_KIND = "strassen_fused"
 # operands staged through device memory in budgeted waves. Enumerated only
 # when the caller supplies a device-memory budget (``oot_budget``).
 OOT_KIND = "strassen_oot"
+
+# Fraction of the overlappable h2d traffic the async wave pipeline still
+# exposes: the pipeline fill (first wave's stage has nothing to hide
+# behind) and drain (last fetch) bubbles, roughly one wave each way out of
+# the ~8 the scheduler needs before fill/drain amortizes. Used by
+# predict_cost_terms when ``oot_overlap`` is on.
+OOT_OVERLAP_EXPOSED_FRACTION = 0.125
 
 
 @dataclasses.dataclass(frozen=True)
@@ -417,6 +425,7 @@ def predict_cost_terms(
     calib: Calibration,
     *,
     device_count: int = 1,
+    oot_overlap: bool = True,
 ) -> Dict[str, float]:
     """Per-constant cost decomposition of one candidate's predicted seconds.
 
@@ -425,6 +434,14 @@ def predict_cost_terms(
     :func:`predict_seconds`. The split is what telemetry and the sweep
     report: it shows *why* a candidate wins (compute vs local traffic vs
     interconnect vs host<->device staging).
+
+    ``oot_overlap`` models the scheduler's async wave pipeline (its
+    default): staging traffic that fits under the leaf compute is hidden,
+    so the ``t_h2d`` term only charges the *exposed* part — the traffic
+    exceeding compute plus the fill/drain bubble
+    (:data:`OOT_OVERLAP_EXPOSED_FRACTION` of the hidden portion). Pass
+    ``oot_overlap=False`` to price the synchronous loop (``prefetch=False``),
+    where every staged byte is on the critical path.
     """
     flops_naive = 2.0 * m * k * n
     t_coll = calib.t_coll if calib.t_coll > 0.0 else calib.t_elem
@@ -465,11 +482,17 @@ def predict_cost_terms(
         # leaf waves run sequentially on one device (PF=1) and every leaf's
         # operands cross the host<->device boundary once each way.
         t_h2d = calib.t_h2d if calib.t_h2d > 0.0 else calib.t_elem
-        terms["t_flop"] = leaf_flops * calib.t_flop
+        flop_s = leaf_flops * calib.t_flop
+        h2d_s = rank**l * (m * k + k * n + m * n) / 4.0**l * t_h2d
+        if oot_overlap:
+            # Async pipeline: staging overlaps leaf compute, so only the
+            # traffic exceeding compute is on the critical path — plus the
+            # fill/drain bubble, a fixed fraction of the hidden portion.
+            hidden = min(h2d_s, flop_s)
+            h2d_s = max(h2d_s - flop_s, 0.0) + OOT_OVERLAP_EXPOSED_FRACTION * hidden
+        terms["t_flop"] = flop_s
         terms["t_elem"] = elem_cost * calib.t_elem
-        terms["t_h2d"] = (
-            rank**l * (m * k + k * n + m * n) / 4.0**l * t_h2d
-        )
+        terms["t_h2d"] = h2d_s
         return terms
 
     coll_cost = 0.0
@@ -522,6 +545,7 @@ def predict_seconds(
     calib: Calibration,
     *,
     device_count: int = 1,
+    oot_overlap: bool = True,
 ) -> float:
     """Predicted wall-clock for one multiply under the calibrated model.
 
@@ -535,11 +559,15 @@ def predict_seconds(
     ``t_coll`` (falling back to ``t_elem`` for pre-t_coll calibrations);
     local HBM traffic stays at ``t_elem``. Fused-leaf candidates skip the
     last level's materialized traffic. Out-of-core candidates add the
-    host<->device staging term priced at ``t_h2d``. See
-    :func:`predict_cost_terms` for the per-constant decomposition.
+    host<->device staging term priced at ``t_h2d`` — discounted to the
+    exposed traffic when ``oot_overlap`` is on (the scheduler's async
+    pipeline default). See :func:`predict_cost_terms` for the per-constant
+    decomposition.
     """
     return sum(
-        predict_cost_terms(cand, m, k, n, calib, device_count=device_count).values()
+        predict_cost_terms(
+            cand, m, k, n, calib, device_count=device_count, oot_overlap=oot_overlap
+        ).values()
     )
 
 
@@ -829,6 +857,19 @@ def get_telemetry() -> Telemetry:
     return _TELEMETRY
 
 
+def reset_telemetry() -> Telemetry:
+    """Zero the process telemetry and return it.
+
+    Resolutions fire at jit-trace time, so per-engine attribution is
+    impossible to scope structurally — instead every surface that owns a
+    run (``Engine.__init__``, the benchmark sweeps) resets the process log
+    up front so its snapshot reflects only its own resolutions, not a
+    previous engine's (the counters used to leak across instances).
+    """
+    _TELEMETRY.reset()
+    return _TELEMETRY
+
+
 _PROCESS_CACHES: Dict[str, TuningCache] = {}
 
 
@@ -862,6 +903,7 @@ def autotune(
     precision=None,
     site: Optional[str] = None,
     oot_budget: Optional[int] = None,
+    telemetry: Optional[Telemetry] = None,
 ) -> Decision:
     """Pick the predicted- (or measured-) fastest strategy for this shape.
 
@@ -875,7 +917,12 @@ def autotune(
     prediction cannot differ per site — but measured mode never does: a
     measured site decision must come from measuring *that* site's key, so
     e.g. same-width QKV and MLP projections can diverge.
+
+    ``telemetry`` records the resolution to a caller-owned log instead of
+    the process one — experiments that must not interleave with a live
+    engine's counters pass their own :class:`Telemetry`.
     """
+    tel = telemetry if telemetry is not None else _TELEMETRY
     dev = jax.devices()[0]
     if mesh is not None:
         device_count = len(mesh.devices.flatten())
@@ -907,7 +954,7 @@ def autotune(
                 hit = None
         if hit is not None:
             decision = dataclasses.replace(hit, source="cache")
-            _TELEMETRY.record(
+            tel.record(
                 TelemetryEvent(
                     key=key,
                     site=site,
@@ -967,7 +1014,7 @@ def autotune(
         )
         cache.put(store_key, decision)
         cache.save()
-    _TELEMETRY.record(
+    tel.record(
         TelemetryEvent(
             key=key,
             site=site,

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -31,6 +32,11 @@ __all__ = [
     "VALID_KINDS",
     "EAGER_ONLY_KINDS",
     "JIT_SAFE_KINDS",
+    "XLA_ASYNC_FLAGS",
+    "enable_xla_async_flags",
+    "set_default_matmul_precision",
+    "default_matmul_precision",
+    "resolve_precision",
 ]
 
 # The registered routing kinds: every MatmulBackend.kind (and every CLI
@@ -53,6 +59,67 @@ JIT_SAFE_KINDS: Tuple[str, ...] = tuple(
     k for k in VALID_KINDS if k not in EAGER_ONLY_KINDS
 )
 
+# XLA flags that let the compiler overlap collectives and transfers with
+# compute (the bayespec config.py GPU recipe): the scheduler-level analogue
+# of the out-of-core wave pipeline. They only take effect if appended to
+# XLA_FLAGS before the jax backend initializes — enable_xla_async_flags()
+# reports which regime it ran in.
+XLA_ASYNC_FLAGS: Tuple[str, ...] = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+# Process-default matmul precision, the HomebrewNLP backend.py discipline:
+# precision policy is a backend knob set once, not threaded per call site.
+# A MatmulBackend with precision=None inherits this default.
+_DEFAULT_PRECISION: Optional[str] = None
+
+
+def set_default_matmul_precision(precision: Optional[str]) -> Optional[str]:
+    """Set the process default for backends with ``precision=None``.
+
+    Accepts jax precision names ('default' | 'fastest' | 'high' |
+    'highest') or None to clear. Returns the previous default.
+    """
+    global _DEFAULT_PRECISION
+    if precision is not None and precision not in (
+        "default", "fastest", "high", "highest", "bfloat16", "float32", "tensorfloat32"
+    ):
+        raise ValueError(f"unknown matmul precision {precision!r}")
+    prev, _DEFAULT_PRECISION = _DEFAULT_PRECISION, precision
+    return prev
+
+
+def default_matmul_precision() -> Optional[str]:
+    return _DEFAULT_PRECISION
+
+
+def resolve_precision(backend: "MatmulBackend") -> Optional[str]:
+    """The precision a backend's matmuls run at: its own, else the default."""
+    return backend.precision if backend.precision is not None else _DEFAULT_PRECISION
+
+
+def enable_xla_async_flags(flags: Tuple[str, ...] = XLA_ASYNC_FLAGS) -> bool:
+    """Append latency-hiding/async-collective flags to ``XLA_FLAGS``.
+
+    Idempotent: flags already present (under any value) are left alone.
+    Returns True when the jax backend has not initialized yet — i.e. the
+    flags will actually reach XLA — and False when they can only take
+    effect in a future process (set XLA_FLAGS before the first jax call).
+    """
+    current = os.environ.get("XLA_FLAGS", "")
+    missing = [f for f in flags if f.split("=", 1)[0] not in current]
+    if missing:
+        os.environ["XLA_FLAGS"] = " ".join(([current] if current else []) + missing)
+    try:  # private, so probed defensively: absence just means "unknown"
+        from jax._src import xla_bridge
+
+        initialized = bool(xla_bridge._backends)
+    except Exception:  # pragma: no cover - jax internals moved
+        initialized = False
+    return not initialized
+
 
 @dataclasses.dataclass(frozen=True)
 class MatmulBackend:
@@ -71,7 +138,14 @@ class MatmulBackend:
         budget.
       min_dim: minimum of (M, K, N) below which the call falls back to the
         naive matmul (the paper's leaf threshold / crossover point).
-      precision: jax precision for leaf matmuls ('default' | 'highest'...).
+      precision: jax precision for leaf matmuls ('default' | 'fastest' |
+        'highest'...). None inherits the process default set via
+        :func:`set_default_matmul_precision` — precision policy is a
+        backend knob, not a per-call-site argument.
+      latency_hiding: apply :data:`XLA_ASYNC_FLAGS` (latency-hiding
+        scheduler + async collectives) once via :meth:`configure` — called
+        by the surfaces that own a backend for a whole run (serving
+        engine, out-of-core scheduler), never per call site.
       tuning_cache: optional path to a persistent autotune JSON cache
         ('auto' only). Decisions found there are reused verbatim — the
         serving engine points this at its warmed startup cache.
@@ -92,6 +166,7 @@ class MatmulBackend:
     measure: bool = False
     schemes: Tuple[str, ...] = ("strassen", "winograd")
     device_budget: Optional[int] = None
+    latency_hiding: bool = False
 
     def __post_init__(self):
         if self.kind not in VALID_KINDS:
@@ -99,6 +174,17 @@ class MatmulBackend:
                 f"unknown matmul backend kind {self.kind!r}; "
                 f"valid kinds: {', '.join(VALID_KINDS)}"
             )
+
+    def configure(self) -> "MatmulBackend":
+        """Apply the backend's process-level knobs once (idempotent).
+
+        Today that is the XLA latency-hiding/async-collective flag set;
+        call it from the surface that owns the backend for a run (Engine
+        startup, scheduler construction) rather than per matmul.
+        """
+        if self.latency_hiding:
+            enable_xla_async_flags()
+        return self
 
     @property
     def scheme_name(self) -> str:
@@ -217,7 +303,8 @@ def _matmul_oot(x, w, backend: MatmulBackend, lead, m: int, k: int, n: int):
     if leaf_bytes(m, k, n, depth, dtype) > budget:
         depth = min_depth_for_budget(m, k, n, budget, dtype)
     leaf_backend = MatmulBackend(
-        kind="auto", depth=2, min_dim=backend.min_dim, precision=backend.precision
+        kind="auto", depth=2, min_dim=backend.min_dim,
+        precision=resolve_precision(backend),
     )
     out, _ = strassen_oot_matmul(
         x_h,
@@ -279,9 +366,10 @@ def matmul(
     if backend.kind == "strassen_oot":
         return _matmul_oot(x, w, backend, lead, m, k, n)
 
+    precision = resolve_precision(backend)
     depth = backend.effective_depth(m, k, n) if backend.kind != "naive" else 0
     if depth == 0:
-        return jnp.matmul(x, w, precision=backend.precision)
+        return jnp.matmul(x, w, precision=precision)
 
     x2 = x.reshape(m, k)
     if backend.kind == "strassen_fused":
@@ -300,7 +388,7 @@ def matmul(
             x2 = constrain(x2, "batch", None)
             w = constrain(w, w_in, w_out)
         out = strassen_ops.strassen_matmul_fused(
-            x2, w, depth=depth, precision=backend.precision
+            x2, w, depth=depth, precision=precision
         )
         if w_logical is not None:
             out = constrain(out, "batch", w_logical[1])
@@ -318,7 +406,7 @@ def matmul(
             w,
             depth=depth,
             scheme=backend.scheme_name,
-            precision=backend.precision,
+            precision=precision,
             constrain_a=c_a,
             constrain_b=c_b,
             constrain_out=c_out,

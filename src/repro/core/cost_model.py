@@ -43,10 +43,20 @@ class StageCost:
     communication: float  # elements moved
     parallelization: float  # PF (before min with cores)
 
-    def wall_clock(self, cores: int, t_flop: float, t_elem: float) -> float:
+    def wall_clock(
+        self, cores: int, t_flop: float, t_elem: float, *, overlap: bool = False
+    ) -> float:
         pf = min(self.parallelization, cores)
         pf = max(pf, 1.0)
-        return (self.computation * t_flop + self.communication * t_elem) / pf
+        comp_s = self.computation * t_flop
+        comm_s = self.communication * t_elem
+        if overlap:
+            # Latency-hidden regime: the engine issues a stage's transfers
+            # while its compute runs (the oot scheduler's async wave
+            # pipeline / an overlapped Spark shuffle), so the stage costs
+            # the longer of the two streams instead of their sum.
+            return max(comp_s, comm_s) / pf
+        return (comp_s + comm_s) / pf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,14 +70,21 @@ class CostModel:
     t_flop: float = 1.0e-9
     t_elem: float = 4.0e-9
 
-    def total(self, stages: List[StageCost], cores: int) -> float:
-        return sum(s.wall_clock(cores, self.t_flop, self.t_elem) for s in stages)
+    def total(
+        self, stages: List[StageCost], cores: int, *, overlap: bool = False
+    ) -> float:
+        return sum(
+            s.wall_clock(cores, self.t_flop, self.t_elem, overlap=overlap)
+            for s in stages
+        )
 
-    def by_section(self, stages: List[StageCost], cores: int) -> Dict[str, float]:
+    def by_section(
+        self, stages: List[StageCost], cores: int, *, overlap: bool = False
+    ) -> Dict[str, float]:
         out: Dict[str, float] = {}
         for s in stages:
             out[s.section] = out.get(s.section, 0.0) + s.wall_clock(
-                cores, self.t_flop, self.t_elem
+                cores, self.t_flop, self.t_elem, overlap=overlap
             )
         return out
 
@@ -208,11 +225,22 @@ _SYSTEMS = {
 
 
 def total_cost(
-    system: str, n: int, b: int, cores: int, model: CostModel | None = None
+    system: str,
+    n: int,
+    b: int,
+    cores: int,
+    model: CostModel | None = None,
+    *,
+    overlap: bool = False,
 ) -> float:
-    """Predicted wall-clock seconds for one distributed multiply."""
+    """Predicted wall-clock seconds for one distributed multiply.
+
+    ``overlap=True`` prices each stage at max(compute, communication)
+    instead of their sum — the latency-hidden regime an async pipeline
+    (or an overlapped shuffle) achieves.
+    """
     model = model or CostModel()
-    return model.total(_SYSTEMS[system](n, b), cores)
+    return model.total(_SYSTEMS[system](n, b), cores, overlap=overlap)
 
 
 def stage_count(system: str, n: int, b: int) -> int:

@@ -43,7 +43,7 @@ def main():
     ap.add_argument("--leaf-backend", default="auto",
                     help="matmul routing kind for the leaf waves")
     ap.add_argument("--no-prefetch", action="store_true",
-                    help="disable double-buffered staging")
+                    help="disable the async 2-deep staging pipeline")
     ap.add_argument("--check", action="store_true",
                     help="verify against the dense jnp.matmul")
     ap.add_argument("--seed", type=int, default=0)
@@ -62,7 +62,9 @@ def main():
         import ml_dtypes
 
         dtype = np.dtype(ml_dtypes.bfloat16)
-    depth = args.depth or min_depth_for_budget(m, k, n, budget // 2, dtype)
+    depth = args.depth or min_depth_for_budget(
+        m, k, n, budget, dtype, pipelined=not args.no_prefetch
+    )
 
     rng = np.random.default_rng(args.seed)
     a = rng.standard_normal((m, k)).astype(dtype)
@@ -89,6 +91,11 @@ def main():
         f"done in {stats.total_s:.2f}s  "
         f"(divide {stats.divide_s:.2f}s, leaf {stats.leaf_s:.2f}s "
         f"[{stats.waves} waves x {stats.wave_size}], combine {stats.combine_s:.2f}s)"
+    )
+    print(
+        f"pipeline: {'async 2-deep' if stats.prefetch else 'synchronous'} | "
+        f"stage {stats.stage_s:.2f}s, fetch {stats.fetch_s:.2f}s, "
+        f"overlap efficiency {stats.overlap_efficiency:.2f}"
     )
     print(
         f"device: peak {stats.peak_device_bytes / 2**20:.2f} / "

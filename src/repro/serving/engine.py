@@ -37,6 +37,14 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig = ServeConfig()):
+        # Telemetry is process-scoped (resolutions fire at jit-trace time),
+        # so each engine zeroes it up front: autotune_stats()/generate()
+        # then report this engine's resolutions, not a previous instance's
+        # — two engines used to interleave counters and decision records.
+        autotune.reset_telemetry()
+        # Apply process-level backend knobs (XLA latency-hiding flags)
+        # once per run, here rather than per call site.
+        cfg.matmul_backend.configure()
         if cfg.matmul_backend.kind == "auto":
             if serve_cfg.tuning_cache and not cfg.matmul_backend.tuning_cache:
                 cfg = dataclasses.replace(
@@ -144,9 +152,15 @@ class Engine:
         ``terms`` (t_flop/t_elem/t_coll seconds, and t_h2d for the
         out-of-core ``strassen_oot`` family); ``calibration`` reports the
         fitted constants themselves (None when every decision came from a
-        warm cache and no calibration ever ran).
+        warm cache and no calibration ever ran). ``oot`` carries the
+        out-of-core scheduler's recent run stats (waves, peak device
+        bytes, overlap telemetry) for any ``strassen_oot`` resolutions
+        this process executed since the engine was built.
         """
+        from repro.blocks.scheduler import recent_oot_stats
+
         return {
             **autotune.get_telemetry().snapshot(),
             "calibration": autotune.calibration_snapshot(),
+            "oot": recent_oot_stats(),
         }

@@ -538,3 +538,23 @@ def test_warm_for_model_counts_resolutions():
     info_before = resolve_auto.cache_info().currsize
     autotune.warm_for_model(cfg, tokens=(1, 64))
     assert resolve_auto.cache_info().currsize == info_before
+
+
+def test_reset_telemetry_and_caller_owned_log():
+    """reset_telemetry() zeroes the process log (how Engine scopes its
+    stats per instance), and autotune(telemetry=...) records to a
+    caller-owned Telemetry, leaving the process log untouched."""
+    tel = autotune.get_telemetry()
+    tel.reset()
+    autotune.autotune(4096, 4096, 4096, calibration=CALIB, cache=TuningCache())
+    assert tel.snapshot()["cache_misses"] == 1
+    assert autotune.reset_telemetry() is tel
+    snap = tel.snapshot()
+    assert snap["cache_hits"] == 0 and snap["cache_misses"] == 0
+    assert not snap["decisions"]
+    own = autotune.Telemetry()
+    autotune.autotune(
+        4096, 4096, 4096, calibration=CALIB, cache=TuningCache(), telemetry=own
+    )
+    assert own.cache_misses == 1 and len(own.events) == 1
+    assert tel.snapshot()["cache_misses"] == 0  # process log untouched

@@ -280,6 +280,174 @@ def test_oot_scheduler_validates_config():
         StrassenScheduler(depth=1, budget_bytes=0)
 
 
+# ------------------------------------------------- async wave pipeline
+@pytest.mark.parametrize("store_kind", ["dict", "arena", "memmap"])
+def test_oot_pipelined_matches_sync_bitexact_f32(store_kind):
+    """The async 2-deep pipeline runs the identical leaf schedule as the
+    synchronous loop — f32 results are bit-exact across every store, and
+    both runs' modeled peaks respect the budget."""
+    m, k, n = 200, 136, 168
+    a, b = _rand((m, k)), _rand((k, n))
+    budget = min(a.nbytes, b.nbytes) // 2
+    kw = dict(depth=2, budget_bytes=budget, backend=NAIVE_LEAVES, store=store_kind)
+    out_pipe, st_pipe = strassen_oot_matmul(a, b, **kw)
+    out_sync, st_sync = strassen_oot_matmul(a, b, prefetch=False, **kw)
+    assert st_pipe.prefetch and st_pipe.waves >= 2
+    assert not st_sync.prefetch
+    assert np.array_equal(out_pipe, out_sync)
+    assert _rel_err(out_pipe, a @ b) < 2e-3
+    st_pipe.assert_within_budget()
+    st_sync.assert_within_budget()
+    assert st_sync.overlap_efficiency == 0.0
+
+
+@pytest.mark.parametrize("store_kind", ["dict", "arena", "memmap"])
+def test_oot_pipelined_bf16_parity_all_stores(store_kind):
+    """bf16 pipelined == bf16 sync bit-for-bit, and both stay inside the
+    CI gate's 1e-2 vs the dense bf16 matmul."""
+    a = jnp.asarray(_rand((160, 96))).astype(jnp.bfloat16)
+    b = jnp.asarray(_rand((96, 128))).astype(jnp.bfloat16)
+    a_h, b_h = np.asarray(a), np.asarray(b)
+    kw = dict(depth=2, budget_bytes=a_h.nbytes, backend=NAIVE_LEAVES, store=store_kind)
+    out_pipe, st_pipe = strassen_oot_matmul(a_h, b_h, **kw)
+    out_sync, _ = strassen_oot_matmul(a_h, b_h, prefetch=False, **kw)
+    assert st_pipe.prefetch and st_pipe.waves >= 2
+    assert out_pipe.dtype == a_h.dtype
+    assert out_pipe.tobytes() == out_sync.tobytes()
+    assert _rel_err(out_pipe, jnp.matmul(a, b)) < 1e-2
+
+
+def test_oot_overlap_telemetry_on_forced_multiwave_run():
+    """A forced multi-wave pipelined run reports strictly positive
+    overlap_efficiency, carries ordered per-wave timestamps that show the
+    interleave (wave k+1 staged before wave k's fetch), and lands in the
+    process's recent-stats ring."""
+    from repro.blocks.scheduler import recent_oot_stats, reset_oot_stats
+
+    reset_oot_stats()
+    a, b = _rand((192, 192)), _rand((192, 192))
+    budget = 2 * leaf_bytes(192, 192, 192, 2, a.dtype)  # one pipelined slot
+    out, stats = strassen_oot_matmul(
+        a, b, depth=2, budget_bytes=budget, backend=NAIVE_LEAVES
+    )
+    assert _rel_err(out, a @ b) < 2e-3
+    assert stats.prefetch and stats.wave_size == 1 and stats.waves == 49
+    assert 0.0 < stats.overlap_efficiency <= 1.0
+    assert len(stats.wave_events) == stats.waves
+    for e in stats.wave_events:
+        assert (
+            e["issue_start"] <= e["issue_end"] <= e["dispatch_end"]
+            <= e["fetch_start"] <= e["fetch_end"]
+        )
+    # the pipeline interleave: wave 1's staging is issued before wave 0's
+    # D2H fence, so its transfer overlaps wave 0's in-flight compute
+    assert stats.wave_events[1]["issue_start"] < stats.wave_events[0]["fetch_start"]
+    ring = recent_oot_stats()
+    assert ring and ring[-1]["overlap_efficiency"] == stats.overlap_efficiency
+    assert ring[-1]["wave_events"] == stats.wave_events
+    reset_oot_stats()
+    assert recent_oot_stats() == []
+
+
+def test_oot_budget_counts_inflight_pipeline_slot():
+    """Wave sizing charges the in-flight prefetch: with room for one leaf
+    but not a 2x pipelined slot the scheduler degrades to synchronous
+    staging instead of exceeding the budget, and the pipelined depth
+    picker deepens until the 2x slot fits."""
+    m = k = n = 192
+    per_leaf = leaf_bytes(m, k, n, 2, np.float32)
+    a, b = _rand((m, k)), _rand((k, n))
+    budget = 2 * per_leaf - 1  # one leaf fits; a pipelined slot does not
+    out, stats = strassen_oot_matmul(
+        a, b, depth=2, budget_bytes=budget, backend=NAIVE_LEAVES
+    )
+    assert _rel_err(out, a @ b) < 2e-3
+    assert not stats.prefetch and stats.wave_size == 1
+    assert stats.overlap_efficiency == 0.0
+    stats.assert_within_budget()
+    assert min_depth_for_budget(m, k, n, budget, np.float32) == 2
+    assert min_depth_for_budget(m, k, n, budget, np.float32, pipelined=True) == 3
+    assert (
+        min_depth_for_budget(m, k, n, 2 * per_leaf, np.float32, pipelined=True) == 2
+    )
+    # a doctored peak trips the budget assertion
+    stats.peak_device_bytes = stats.budget_bytes + 1
+    with pytest.raises(AssertionError, match="exceeded the budget"):
+        stats.assert_within_budget()
+
+
+def _inject_failing_leaf(monkeypatch, fail_at: int) -> dict:
+    """Make the fail_at-th leaf multiply raise, mid-pipeline."""
+    calls = {"n": 0}
+    real = StrassenScheduler._leaf_matmul
+
+    def boom(self, a_dev, b_dev):
+        calls["n"] += 1
+        if calls["n"] == fail_at:
+            raise RuntimeError("injected leaf failure")
+        return real(self, a_dev, b_dev)
+
+    monkeypatch.setattr(StrassenScheduler, "_leaf_matmul", boom)
+    return calls
+
+
+@pytest.mark.parametrize("store_kind", ["dict", "memmap"])
+def test_oot_failing_leaf_cleans_caller_store_and_device_buffers(
+    store_kind, tmp_path, monkeypatch
+):
+    """A leaf failure mid-pipeline (prefetched wave in flight) must not
+    leak: every block the run created is dropped from a caller-provided
+    store (spilled npy files included), unrelated keys survive, and the
+    in-flight device buffers are released even while the exception's
+    traceback still pins the scheduler frame."""
+    import jax
+
+    a, b = _rand((96, 96)), _rand((96, 96))
+    store = (
+        DictStore() if store_kind == "dict"
+        else MemmapStore(str(tmp_path / "spill"))
+    )
+    keep = np.ones((2, 2), np.float32)
+    store.put((0, 0, "keep"), keep)
+    _inject_failing_leaf(monkeypatch, fail_at=5)
+    baseline = sum(not x.is_deleted() for x in jax.live_arrays())
+    with pytest.raises(RuntimeError, match="injected leaf failure") as excinfo:
+        strassen_oot_matmul(
+            a, b, depth=2, budget_bytes=4 * leaf_bytes(96, 96, 96, 2, a.dtype),
+            backend=NAIVE_LEAVES, store=store,
+        )
+    # excinfo still holds the traceback here, so the frame's device
+    # references are alive — release must have been explicit
+    assert excinfo.traceback
+    assert sum(not x.is_deleted() for x in jax.live_arrays()) <= baseline
+    assert [kk for kk in store.keys() if kk[2][:2] in ("A:", "B:", "C:")] == []
+    np.testing.assert_array_equal(np.asarray(store.get((0, 0, "keep"))), keep)
+    if store_kind == "memmap":
+        assert len(os.listdir(store.root)) == 1  # only the unrelated key
+    store.close()
+
+
+def test_oot_failing_leaf_removes_owned_memmap_spill_dir(monkeypatch):
+    """When the scheduler built the memmap store itself, a failing run
+    removes the whole temp spill directory."""
+    roots = []
+    real_init = MemmapStore.__init__
+
+    def spying_init(self, root=None):
+        real_init(self, root)
+        roots.append(self.root)
+
+    monkeypatch.setattr(MemmapStore, "__init__", spying_init)
+    _inject_failing_leaf(monkeypatch, fail_at=3)
+    a, b = _rand((96, 96)), _rand((96, 96))
+    with pytest.raises(RuntimeError, match="injected leaf failure"):
+        strassen_oot_matmul(
+            a, b, depth=1, budget_bytes=a.nbytes, backend=NAIVE_LEAVES,
+            store="memmap",
+        )
+    assert roots and not os.path.isdir(roots[0])
+
+
 # ------------------------------------------- autotune strassen_oot family
 def test_oot_candidates_enumerate_only_with_budget():
     cands = autotune.enumerate_candidates(512, 512, 512, min_dim=64, max_depth=2)
@@ -362,15 +530,54 @@ def test_oot_predicted_terms_include_t_h2d():
     assert autotune.predict_seconds(cand, 4096, 4096, 4096, CALIB) == pytest.approx(
         sum(terms.values())
     )
-    # staging term scales with t_h2d; local/naive candidates never touch it
+    # staging term scales with t_h2d — checked with the async pipeline's
+    # overlap discount off, since the discount is piecewise in flop time
+    # and deliberately non-linear in t_h2d; local/naive candidates never
+    # touch the term either way
+    raw = autotune.predict_cost_terms(
+        cand, 4096, 4096, 4096, CALIB, oot_overlap=False
+    )
     hot = dataclasses.replace(CALIB, t_h2d=CALIB.t_h2d * 10)
-    assert autotune.predict_cost_terms(cand, 4096, 4096, 4096, hot)[
-        "t_h2d"
-    ] == pytest.approx(terms["t_h2d"] * 10)
+    assert autotune.predict_cost_terms(
+        cand, 4096, 4096, 4096, hot, oot_overlap=False
+    )["t_h2d"] == pytest.approx(raw["t_h2d"] * 10)
     for other in (Candidate(kind="naive"), Candidate(kind="strassen", depth=2)):
         assert autotune.predict_cost_terms(other, 4096, 4096, 4096, CALIB)[
             "t_h2d"
         ] == 0.0
+
+
+def test_oot_overlap_discount_hides_staged_transfer_cost():
+    """Default cost prediction models the 2-deep wave pipeline: H2D time
+    covered by leaf compute shrinks to the exposed fraction; transfer
+    beyond the compute stays fully priced on top of it."""
+    cand = Candidate(kind="strassen_oot", scheme="strassen", depth=2)
+    raw = autotune.predict_cost_terms(
+        cand, 4096, 4096, 4096, CALIB, oot_overlap=False
+    )
+    dft = autotune.predict_cost_terms(cand, 4096, 4096, 4096, CALIB)
+    assert dft["t_flop"] == pytest.approx(raw["t_flop"])
+    assert 0.0 < dft["t_h2d"] < raw["t_h2d"]
+    frac = autotune.OOT_OVERLAP_EXPOSED_FRACTION
+    hidden = min(raw["t_h2d"], raw["t_flop"])
+    assert dft["t_h2d"] == pytest.approx(
+        max(raw["t_h2d"] - raw["t_flop"], 0.0) + frac * hidden
+    )
+    # transfer-bound regime: only the compute-covered slice is discounted
+    hot = dataclasses.replace(CALIB, t_h2d=CALIB.t_h2d * 100)
+    raw_hot = autotune.predict_cost_terms(
+        cand, 4096, 4096, 4096, hot, oot_overlap=False
+    )
+    assert raw_hot["t_h2d"] > raw_hot["t_flop"]
+    assert autotune.predict_cost_terms(cand, 4096, 4096, 4096, hot)[
+        "t_h2d"
+    ] == pytest.approx(
+        raw_hot["t_h2d"] - raw_hot["t_flop"] + frac * raw_hot["t_flop"]
+    )
+    # the discounted prediction still decomposes exactly
+    assert autotune.predict_seconds(cand, 4096, 4096, 4096, hot) == pytest.approx(
+        sum(autotune.predict_cost_terms(cand, 4096, 4096, 4096, hot).values())
+    )
 
 
 def test_predict_terms_decomposition_sums_for_all_kinds():

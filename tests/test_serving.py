@@ -50,3 +50,26 @@ def test_greedy_matches_manual_argmax_rollout(setup):
     np.testing.assert_array_equal(
         np.asarray(toks), np.asarray(jnp.concatenate(manual, axis=1))
     )
+
+
+def test_engine_scopes_autotune_telemetry(setup):
+    """Engine construction zeroes the process autotune telemetry, so each
+    instance's stats cover its own resolutions instead of interleaving
+    with a previous engine's, and autotune_stats() surfaces the
+    out-of-core scheduler's recent runs under "oot"."""
+    from repro.core import autotune
+    from repro.core.autotune import Calibration, TuningCache
+
+    cfg, params, _ = setup
+    calib = Calibration(
+        t_flop=1e-11, t_elem=1e-9, t_coll=4e-9, t_h2d=2e-9,
+        device_kind="test", device_count=1,
+    )
+    # pollute the process log the way a previous engine's resolutions would
+    autotune.autotune(4096, 4096, 4096, calibration=calib, cache=TuningCache())
+    assert autotune.get_telemetry().snapshot()["cache_misses"] >= 1
+    eng = Engine(cfg, params, ServeConfig(max_seq=64))
+    snap = eng.autotune_stats()
+    assert snap["cache_hits"] == 0 and snap["cache_misses"] == 0
+    assert snap["decisions"] == []
+    assert isinstance(snap["oot"], list)

@@ -201,6 +201,32 @@ def test_cost_model_leaf_dominates_small_b():
     assert sections["leaf"] > sections["combine"]
 
 
+def test_cost_model_overlap_prices_stages_at_max_not_sum():
+    """overlap=True models latency-hidden transfers (the oot scheduler's
+    async wave pipeline): each stage costs max(comp, comm) instead of
+    comp + comm, so the overlapped total is never larger and strictly
+    smaller whenever a stage carries both streams."""
+    model = CostModel()
+    stages = stark_stages(8192, 16)
+    seq = model.total(stages, cores=25)
+    ovl = model.total(stages, cores=25, overlap=True)
+    assert ovl < seq
+    for s in stages:
+        both = s.wall_clock(25, model.t_flop, model.t_elem)
+        hid = s.wall_clock(25, model.t_flop, model.t_elem, overlap=True)
+        assert hid <= both
+        pf = max(min(s.parallelization, 25), 1.0)
+        assert hid == pytest.approx(
+            max(s.computation * model.t_flop, s.communication * model.t_elem) / pf
+        )
+    # by_section sums respect the same discount
+    sec_seq = model.by_section(stages, cores=25)
+    sec_ovl = model.by_section(stages, cores=25, overlap=True)
+    assert set(sec_ovl) == set(sec_seq)
+    assert sum(sec_ovl.values()) == pytest.approx(ovl)
+    assert all(sec_ovl[k] <= sec_seq[k] for k in sec_seq)
+
+
 def test_cost_model_stark_fewer_leaf_flops():
     """Stark does b^2.807 leaf multiplies vs b^3 (the paper's core claim)."""
     n, b = 8192, 16
