@@ -23,7 +23,8 @@ staging waves, a parity gate, and the async-pipeline gates:
     PYTHONPATH=src python benchmarks/fig8_scaling.py --smoke
 
 ``--smoke`` also times the synchronous (``prefetch=False``) loop per
-size and reports ``overlap_speedup``. It EXITS NON-ZERO if any size's
+size and reports ``overlap_speedup``. It EXITS NON-ZERO if the pipelined
+and synchronous results are not bit-identical, if any size's
 out-of-core result drifts more than 1e-2 from the dense bf16 matmul, if
 the staging plan degenerates to a single wave (the budget failed to
 force out-of-core behavior), if no size exceeds the device budget, if
@@ -104,7 +105,8 @@ def sweep(
         # "Fits on device" the way a dense multiply would need it:
         # both operands plus the product resident at once.
         fits = 3 * a.nbytes <= budget_bytes
-        # pipelined=True: pick the depth whose 2x leaf slot fits, so the
+        # pipelined=True: pick the depth whose pipelined wave slot (two
+        # leaf working sets + one wave of operand prefetch) fits, so the
         # async pipeline stays enabled instead of degrading to sync.
         d = depth or min_depth_for_budget(
             n, n, n, budget_bytes, np_dtype, pipelined=True
@@ -154,9 +156,13 @@ def sweep(
                 ),
                 key=lambda r: r[1].total_s,
             )
-            assert np.array_equal(
+            # Explicit gate (not a bare assert: those vanish under -O and
+            # would silently drop the CI guarantee).
+            if not np.array_equal(
                 np.asarray(out, np.float32), np.asarray(out_sync, np.float32)
-            ), f"pipelined vs sync mismatch at n={n}"
+            ):
+                print(f"# SMOKE FAIL: pipelined vs sync mismatch at n={n}")
+                sys.exit(1)
             row["sync_s"] = stats_sync.total_s
             row["overlap_speedup"] = stats_sync.total_s / stats.total_s
         if n <= parity_max:

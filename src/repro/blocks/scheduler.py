@@ -9,9 +9,12 @@ host/device memory hierarchy instead of a Spark cluster:
   streaming block-by-block through the :class:`~repro.blocks.blockmatrix
   .BlockStore`, so host working set is O(block), not O(matrix).
 * **leaf** — the 7^q leaf products are batched into *waves* sized so that
-  (current wave operands + products + prefetched next-wave operands +
-  the previous wave's not-yet-fetched products) fit a configurable
-  device-memory budget. The wave loop is a 2-deep asynchronous pipeline
+  (current wave operands + products, the previous wave's still-in-flight
+  working set — its operands stay pinned by the unfenced executions, not
+  just its un-fetched products — and the prefetched next-wave operands)
+  fit a configurable device-memory budget; see
+  :func:`pipelined_leaf_bytes`. The wave loop is a 2-deep asynchronous
+  pipeline
   keyed off JAX's async dispatch: wave k's products are left in flight
   while wave k+1's operands are ``jax.device_put`` and its multiplies
   dispatched, and the only blocking fence is the explicit
@@ -50,6 +53,7 @@ __all__ = [
     "StrassenScheduler",
     "strassen_oot_matmul",
     "leaf_bytes",
+    "pipelined_leaf_bytes",
     "min_depth_for_budget",
     "recent_oot_stats",
     "reset_oot_stats",
@@ -65,8 +69,8 @@ def _leaf_dims(m: int, k: int, n: int, depth: int) -> Tuple[int, int, int]:
     return _ceil_div(m, step), _ceil_div(k, step), _ceil_div(n, step)
 
 
-def leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
-    """Device bytes one leaf multiply needs: A + B operands + C product.
+def _leaf_inout_bytes(m: int, k: int, n: int, depth: int, dtype) -> Tuple[int, int]:
+    """(operand bytes A + B, product bytes C) of one leaf multiply.
 
     Sized at the scheduler's default *staging* dtype — the accumulation
     dtype of ``dtype`` (f32 for bf16 inputs; see
@@ -75,7 +79,33 @@ def leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
     """
     lm, lk, ln = _leaf_dims(m, k, n, depth)
     item = np.dtype(np.result_type(np.dtype(dtype), np.float32)).itemsize
-    return (lm * lk + lk * ln + lm * ln) * item
+    return (lm * lk + lk * ln) * item, lm * ln * item
+
+
+def leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
+    """Device bytes one leaf multiply needs: A + B operands + C product.
+
+    See :func:`_leaf_inout_bytes` for the staging-dtype sizing convention;
+    :func:`pipelined_leaf_bytes` for the async pipeline's per-slot peak.
+    """
+    i, o = _leaf_inout_bytes(m, k, n, depth, dtype)
+    return i + o
+
+
+def pipelined_leaf_bytes(m: int, k: int, n: int, depth: int, dtype) -> int:
+    """Device bytes one leaf *slot* occupies at the async pipeline's peak.
+
+    While wave k computes, the 2-deep pipeline concurrently holds, per
+    slot: wave k's full working set (A + B + C), wave k-1's full working
+    set — its products are not yet fetched and its operands stay pinned
+    by the still-in-flight executions until the D2H fence — and wave
+    k+1's prefetched operands (A + B). That is ``2 * leaf_bytes`` plus
+    one more set of operand bytes; sizing waves (and picking depths) at
+    this slot makes the device budget a bound on actual residency, not
+    just the quiescent single-wave state.
+    """
+    i, o = _leaf_inout_bytes(m, k, n, depth, dtype)
+    return 2 * (i + o) + i
 
 
 def min_depth_for_budget(
@@ -93,14 +123,16 @@ def min_depth_for_budget(
     ``pipelined=False`` (feasibility): one leaf's (A, B, C) resident — the
     scheduler can always run, degrading to un-prefetched single-leaf waves.
     ``pipelined=True`` (the async wave pipeline's peak): a leaf slot plus
-    its in-flight neighbours — next-wave (A, B) prefetch and the previous
-    wave's un-fetched C — i.e. ``2 * leaf_bytes``; depths chosen this way
-    keep the 2-deep pipeline enabled instead of silently falling back to
-    synchronous staging.
+    its in-flight neighbours — the previous wave's whole working set
+    (operands pinned by the unfenced executions, products awaiting D2H)
+    and the next wave's (A, B) prefetch — i.e.
+    :func:`pipelined_leaf_bytes`; depths chosen this way keep the 2-deep
+    pipeline enabled instead of silently falling back to synchronous
+    staging.
     """
-    need = 2 if pipelined else 1
+    size = pipelined_leaf_bytes if pipelined else leaf_bytes
     for depth in range(1, max_depth + 1):
-        if need * leaf_bytes(m, k, n, depth, dtype) <= budget_bytes:
+        if size(m, k, n, depth, dtype) <= budget_bytes:
             return depth
     raise ValueError(
         f"no depth <= {max_depth} fits ({m}x{k}x{n}, {np.dtype(dtype).name}) "
@@ -202,6 +234,48 @@ def _record_run(stats: OotStats) -> None:
         del _RECENT_STATS[: len(_RECENT_STATS) - _RECENT_STATS_MAX]
 
 
+class _RunTrackingStore(BlockStore):
+    """Forwards to a caller-provided store, recording the keys this run put.
+
+    Tags are not run-scoped, so a failing run must delete exactly the
+    blocks *it* created — a tag-prefix sweep would also destroy the blocks
+    of other (interleaved or earlier) scheduler runs sharing the store.
+    """
+
+    def __init__(self, inner: BlockStore) -> None:
+        self.inner = inner
+        self.created: set = set()
+
+    def put(self, key, block) -> None:
+        self.inner.put(key, block)
+        self.created.add(key)
+
+    def get(self, key):
+        return self.inner.get(key)
+
+    def delete(self, key) -> None:
+        self.inner.delete(key)
+        self.created.discard(key)
+
+    def __contains__(self, key) -> bool:
+        return key in self.inner
+
+    def keys(self):
+        return self.inner.keys()
+
+    def nbytes(self) -> int:
+        return self.inner.nbytes()
+
+    def drop_created(self) -> None:
+        """Delete every block this run created and has not already freed."""
+        for key in list(self.created):
+            self.inner.delete(key)
+        self.created.clear()
+
+    def close(self) -> None:  # the caller owns the inner store
+        pass
+
+
 class StrassenScheduler:
     """Budgeted level-order Strassen over a host-resident block store.
 
@@ -221,7 +295,8 @@ class StrassenScheduler:
         wave k's products are still in flight, and the only blocking
         fence is each wave's D2H fetch. Automatically disabled (fully
         synchronous stage -> compute -> fetch per wave) when the budget
-        cannot hold a pipelined slot (2x one leaf's working set).
+        cannot hold a pipelined slot (:func:`pipelined_leaf_bytes`: two
+        leaves' working sets plus one more wave of operand prefetch).
       stage_dtype: dtype of the staged leaf operands (and so of the leaf
         multiply). ``None`` — the default — stages in the accumulation
         dtype (f32 for bf16 inputs): operand combos never round until the
@@ -394,13 +469,15 @@ class StrassenScheduler:
         per_leaf = in_bytes + out_bytes
         # Pipelined wave slot: the 2-deep pipeline keeps, per leaf slot, the
         # current wave's full working set (A + B + C) plus its in-flight
-        # neighbours — the next wave's prefetched operands (A + B) and the
-        # previous wave's not-yet-fetched products (C) — concurrently
-        # resident, i.e. exactly 2x one leaf. Sizing waves at that slot
-        # makes the budget bound hold at the *pipelined* peak, not just the
-        # quiescent single-wave state.
+        # neighbours — the previous wave's WHOLE working set (its products
+        # are not yet fetched and its operands stay pinned by the unfenced
+        # executions until drain's D2H fence) and the next wave's
+        # prefetched operands (A + B) — concurrently resident, i.e.
+        # 2 * per_leaf + in_bytes (pipelined_leaf_bytes). Sizing waves at
+        # that slot makes the budget bound hold at the *pipelined* peak,
+        # not just the quiescent single-wave state.
         prefetch = self.prefetch
-        wave_size = self.budget_bytes // (2 * per_leaf) if prefetch else 0
+        wave_size = self.budget_bytes // (2 * per_leaf + in_bytes) if prefetch else 0
         if wave_size < 1:
             prefetch = False
             wave_size = self.budget_bytes // per_leaf
@@ -423,9 +500,13 @@ class StrassenScheduler:
         acc_item = np.dtype(acc_dtype).itemsize
         slot_bytes = max(bam * bak, bak * bbn, bam * bbn) * acc_item
         # Stores built here from a spec are owned (and closed) here;
-        # caller-provided BlockStore instances stay open for inspection.
+        # caller-provided BlockStore instances stay open for inspection —
+        # and may be shared across runs, so this run's puts are tracked
+        # and the failure path deletes only those.
         owned_store = not isinstance(store, BlockStore)
         store = make_store(store, slot_bytes=slot_bytes, root=store_root)
+        if not owned_store:
+            store = _RunTrackingStore(store)
         # Device arrays in flight per wave index — defined out here so the
         # failure path below can release them even when the exception's
         # traceback keeps the frame (and so these references) alive.
@@ -519,11 +600,19 @@ class StrassenScheduler:
                 return staged
 
             def dispatch(w_idx: int, staged):
-                outs = [
-                    (path, self._leaf_matmul(a_dev, b_dev))
-                    for path, a_dev, b_dev in staged
-                ]
-                in_flight[w_idx].extend(out for _, out in outs)
+                refs = in_flight[w_idx]
+                outs = []
+                for path, a_dev, b_dev in staged:
+                    out = self._leaf_matmul(a_dev, b_dev)
+                    refs.append(out)
+                    outs.append((path, out))
+                # Multiplies issued: drop this wave's operand refs (XLA
+                # keeps the input buffers alive for the in-flight
+                # executions) so they free the moment the leaves complete
+                # instead of surviving until drain. Only on success —
+                # a failing leaf leaves the full ref list for the
+                # failure-path release below.
+                in_flight[w_idx] = [out for _, out in outs]
                 events[w_idx]["dispatch_end"] = now()
                 return outs
 
@@ -564,11 +653,14 @@ class StrassenScheduler:
                 outs = dispatch(w_idx, current)
                 current = None
                 # Modeled concurrent peak this iteration: wave k's working
-                # set + the previous wave's un-fetched products + the next
-                # wave's prefetched operands.
+                # set + the previous wave's whole working set (un-fetched
+                # products, plus operands the in-flight executions may
+                # still pin) + the next wave's prefetched operands —
+                # matching the wave sizing above, so the budget bounds
+                # actual residency.
                 device_now = len(wave) * per_leaf
                 if pending is not None:
-                    device_now += len(pending[1]) * out_bytes
+                    device_now += len(pending[1]) * per_leaf
                 if prefetch and w_idx + 1 < len(waves):
                     device_now += len(waves[w_idx + 1]) * in_bytes
                 stats.peak_device_bytes = max(stats.peak_device_bytes, device_now)
@@ -626,8 +718,9 @@ class StrassenScheduler:
             # frame, so dropping the dict alone would keep them alive as
             # long as the caller holds the exception — and, for
             # caller-provided stores the finally below will NOT close,
-            # drop every block this run created (all the run's tags start
-            # with "A:"/"B:"/"C:", memmap spill files included).
+            # drop exactly the blocks this run put (tracked per key:
+            # tags are not run-scoped, and a shared store may hold other
+            # runs' blocks under the same "A:"/"B:"/"C:" tag space).
             for refs in in_flight.values():
                 for buf in refs:
                     try:
@@ -636,10 +729,7 @@ class StrassenScheduler:
                         pass
             in_flight.clear()
             if not owned_store:
-                for key in [
-                    kk for kk in store.keys() if kk[2][:2] in ("A:", "B:", "C:")
-                ]:
-                    store.delete(key)
+                store.drop_created()
             raise
         finally:
             if owned_store:

@@ -106,6 +106,25 @@ OOT_KIND = "strassen_oot"
 OOT_OVERLAP_EXPOSED_FRACTION = 0.125
 
 
+def _oot_pipeline_fits(
+    m: int, k: int, n: int, depth: int, dtype, oot_budget: Optional[int]
+) -> bool:
+    """Whether the oot scheduler can actually run its async pipeline.
+
+    The 2-deep wave pipeline needs one pipelined wave slot
+    (:func:`repro.blocks.scheduler.pipelined_leaf_bytes`) inside the
+    budget at this depth; with less room the scheduler silently degrades
+    to synchronous staging, so predictions must not take the overlap
+    discount. A ``None``/0 budget means :func:`execute` will default the
+    budget to exactly one pipelined slot, so the pipeline runs.
+    """
+    if not oot_budget:
+        return True
+    from repro.blocks.scheduler import pipelined_leaf_bytes
+
+    return pipelined_leaf_bytes(m, k, n, depth, dtype) <= oot_budget
+
+
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One executable strategy instance for a fixed (M, K, N)."""
@@ -589,20 +608,20 @@ def execute(
 
     ``strassen_oot`` candidates run the host-resident block pipeline
     eagerly (they cannot trace under jit); ``oot_budget`` caps their
-    device bytes, defaulting to double-buffered single-leaf waves.
+    device bytes, defaulting to one single-leaf pipelined wave slot.
     """
     if cand.is_naive:
         return jnp.matmul(a, b, precision=precision)
     if cand.kind == OOT_KIND:
         import numpy as np
 
-        from repro.blocks.scheduler import leaf_bytes, strassen_oot_matmul
+        from repro.blocks.scheduler import pipelined_leaf_bytes, strassen_oot_matmul
 
         a_h, b_h = np.asarray(a), np.asarray(b)
         m, k = a_h.shape
         n = b_h.shape[1]
         dtype = np.result_type(a_h.dtype, b_h.dtype)
-        budget = oot_budget or 2 * leaf_bytes(m, k, n, cand.depth, dtype)
+        budget = oot_budget or pipelined_leaf_bytes(m, k, n, cand.depth, dtype)
         leaf_backend = None
         if precision is not None:
             # Thread the caller's precision into the leaf waves — measured
@@ -974,12 +993,26 @@ def autotune(
         m, k, n, schemes=schemes, max_depth=max_depth, min_dim=min_dim, mesh=mesh,
         oot_budget=oot_budget, dtype=dtype,
     )
+
+    def _overlap(c: Candidate) -> bool:
+        # Price an oot candidate's overlap discount only when the budget
+        # actually leaves the scheduler its pipelined wave slot at that
+        # depth — otherwise it silently degrades to synchronous staging
+        # and every staged byte is on the critical path.
+        return c.kind != OOT_KIND or _oot_pipeline_fits(
+            m, k, n, c.depth, dtype, oot_budget
+        )
+
     scored = sorted(
         cands,
-        key=lambda c: predict_seconds(c, m, k, n, calib, device_count=device_count),
+        key=lambda c: predict_seconds(
+            c, m, k, n, calib, device_count=device_count, oot_overlap=_overlap(c)
+        ),
     )
     best = scored[0]
-    predicted = predict_seconds(best, m, k, n, calib, device_count=device_count)
+    predicted = predict_seconds(
+        best, m, k, n, calib, device_count=device_count, oot_overlap=_overlap(best)
+    )
     measured = None
     if measure:
         timed = [
@@ -993,7 +1026,10 @@ def autotune(
             for c in scored[: max(top_k, 1)]
         ]
         measured, best = min(timed, key=lambda t: t[0])
-        predicted = predict_seconds(best, m, k, n, calib, device_count=device_count)
+        predicted = predict_seconds(
+            best, m, k, n, calib, device_count=device_count,
+            oot_overlap=_overlap(best),
+        )
 
     decision = Decision(
         kind=best.kind,
@@ -1025,7 +1061,10 @@ def autotune(
             cache_hit=False,
             predicted_s=decision.predicted_s,
             measured_s=decision.measured_s,
-            terms=predict_cost_terms(best, m, k, n, calib, device_count=device_count),
+            terms=predict_cost_terms(
+                best, m, k, n, calib, device_count=device_count,
+                oot_overlap=_overlap(best),
+            ),
         )
     )
     return decision

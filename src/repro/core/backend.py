@@ -134,8 +134,9 @@ class MatmulBackend:
         operands, device bytes capped by ``device_budget`` — eager-only.
       depth: Strassen recursion depth (paper's p - q). Ignored for naive;
         for 'auto' it is the maximum depth the tuner may pick; for
-        'strassen_oot' it deepens automatically until a leaf fits the
-        budget.
+        'strassen_oot' it deepens automatically until the async pipeline's
+        wave slot fits the budget (falling back to a bare leaf when no
+        depth leaves pipeline headroom).
       min_dim: minimum of (M, K, N) below which the call falls back to the
         naive matmul (the paper's leaf threshold / crossover point).
       precision: jax precision for leaf matmuls ('default' | 'fastest' |
@@ -154,8 +155,9 @@ class MatmulBackend:
       schemes: coefficient schemes 'auto' may choose between.
       device_budget: peak device bytes the out-of-core pipeline may use
         ('strassen_oot', and the gate that lets 'auto' enumerate the
-        strassen_oot candidate family). None: 'strassen_oot' sizes waves
-        to double-buffered single leaves; 'auto' never picks out-of-core.
+        strassen_oot candidate family). None: 'strassen_oot' budgets one
+        single-leaf pipelined wave slot (two leaf working sets plus one
+        wave of operand prefetch); 'auto' never picks out-of-core.
     """
 
     kind: str = "naive"
@@ -285,6 +287,7 @@ def _matmul_oot(x, w, backend: MatmulBackend, lead, m: int, k: int, n: int):
     from repro.blocks.scheduler import (
         leaf_bytes,
         min_depth_for_budget,
+        pipelined_leaf_bytes,
         strassen_oot_matmul,
     )
 
@@ -298,10 +301,18 @@ def _matmul_oot(x, w, backend: MatmulBackend, lead, m: int, k: int, n: int):
     w_h = np.asarray(w)
     dtype = np.result_type(x_h.dtype, w_h.dtype)
     depth = max(backend.depth, 1)
-    budget = backend.device_budget or 2 * leaf_bytes(m, k, n, depth, dtype)
-    # Deepen until one leaf fits the budget (the scheduler would refuse).
-    if leaf_bytes(m, k, n, depth, dtype) > budget:
-        depth = min_depth_for_budget(m, k, n, budget, dtype)
+    budget = backend.device_budget or pipelined_leaf_bytes(m, k, n, depth, dtype)
+    # Deepen until the async pipeline's wave slot fits the budget — a
+    # depth that only fits one bare leaf silently degrades the scheduler
+    # to synchronous staging, which the autotuner's overlap-discounted
+    # prediction did not price. Fall back to the merely-feasible depth
+    # when no depth leaves pipeline headroom.
+    if pipelined_leaf_bytes(m, k, n, depth, dtype) > budget:
+        try:
+            depth = min_depth_for_budget(m, k, n, budget, dtype, pipelined=True)
+        except ValueError:
+            if leaf_bytes(m, k, n, depth, dtype) > budget:
+                depth = min_depth_for_budget(m, k, n, budget, dtype)
     leaf_backend = MatmulBackend(
         kind="auto", depth=2, min_dim=backend.min_dim,
         precision=resolve_precision(backend),

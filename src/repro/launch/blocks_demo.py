@@ -3,7 +3,7 @@
 Drives :mod:`repro.blocks` end to end — ingest dense operands into a host
 block store (dict / RAM arena / npy memmap spill), walk the tagged
 recursion tree level by level, stage the 7^depth leaf products through
-device memory in budgeted double-buffered waves, and verify the result
+device memory in budgeted async-pipelined waves, and verify the result
 against the dense matmul.
 
 Usage (CPU-scale):

@@ -41,7 +41,13 @@ class Engine:
         # so each engine zeroes it up front: autotune_stats()/generate()
         # then report this engine's resolutions, not a previous instance's
         # — two engines used to interleave counters and decision records.
+        # The out-of-core run ring is process-global for the same reason
+        # and gets the same treatment, keeping autotune_stats()["oot"]
+        # scoped to runs since this engine was built.
         autotune.reset_telemetry()
+        from repro.blocks.scheduler import reset_oot_stats
+
+        reset_oot_stats()
         # Apply process-level backend knobs (XLA latency-hiding flags)
         # once per run, here rather than per call site.
         cfg.matmul_backend.configure()

@@ -18,6 +18,7 @@ from repro.blocks.scheduler import (
     StrassenScheduler,
     leaf_bytes,
     min_depth_for_budget,
+    pipelined_leaf_bytes,
     strassen_oot_matmul,
 )
 from repro.core import autotune
@@ -288,7 +289,9 @@ def test_oot_pipelined_matches_sync_bitexact_f32(store_kind):
     both runs' modeled peaks respect the budget."""
     m, k, n = 200, 136, 168
     a, b = _rand((m, k)), _rand((k, n))
-    budget = min(a.nbytes, b.nbytes) // 2
+    # one pipelined wave slot — still smaller than either operand
+    budget = pipelined_leaf_bytes(m, k, n, 2, np.float32)
+    assert budget < min(a.nbytes, b.nbytes)
     kw = dict(depth=2, budget_bytes=budget, backend=NAIVE_LEAVES, store=store_kind)
     out_pipe, st_pipe = strassen_oot_matmul(a, b, **kw)
     out_sync, st_sync = strassen_oot_matmul(a, b, prefetch=False, **kw)
@@ -308,7 +311,8 @@ def test_oot_pipelined_bf16_parity_all_stores(store_kind):
     a = jnp.asarray(_rand((160, 96))).astype(jnp.bfloat16)
     b = jnp.asarray(_rand((96, 128))).astype(jnp.bfloat16)
     a_h, b_h = np.asarray(a), np.asarray(b)
-    kw = dict(depth=2, budget_bytes=a_h.nbytes, backend=NAIVE_LEAVES, store=store_kind)
+    budget = pipelined_leaf_bytes(160, 96, 128, 2, a_h.dtype)
+    kw = dict(depth=2, budget_bytes=budget, backend=NAIVE_LEAVES, store=store_kind)
     out_pipe, st_pipe = strassen_oot_matmul(a_h, b_h, **kw)
     out_sync, _ = strassen_oot_matmul(a_h, b_h, prefetch=False, **kw)
     assert st_pipe.prefetch and st_pipe.waves >= 2
@@ -326,12 +330,15 @@ def test_oot_overlap_telemetry_on_forced_multiwave_run():
 
     reset_oot_stats()
     a, b = _rand((192, 192)), _rand((192, 192))
-    budget = 2 * leaf_bytes(192, 192, 192, 2, a.dtype)  # one pipelined slot
+    budget = pipelined_leaf_bytes(192, 192, 192, 2, a.dtype)  # one pipelined slot
     out, stats = strassen_oot_matmul(
         a, b, depth=2, budget_bytes=budget, backend=NAIVE_LEAVES
     )
     assert _rel_err(out, a @ b) < 2e-3
     assert stats.prefetch and stats.wave_size == 1 and stats.waves == 49
+    # the modeled peak charges both in-flight waves in full plus the
+    # prefetch, saturating a one-slot budget exactly
+    assert stats.peak_device_bytes == budget
     assert 0.0 < stats.overlap_efficiency <= 1.0
     assert len(stats.wave_events) == stats.waves
     for e in stats.wave_events:
@@ -350,26 +357,30 @@ def test_oot_overlap_telemetry_on_forced_multiwave_run():
 
 
 def test_oot_budget_counts_inflight_pipeline_slot():
-    """Wave sizing charges the in-flight prefetch: with room for one leaf
-    but not a 2x pipelined slot the scheduler degrades to synchronous
-    staging instead of exceeding the budget, and the pipelined depth
-    picker deepens until the 2x slot fits."""
+    """Wave sizing charges the full in-flight pipeline: the slot is two
+    whole leaf working sets (the previous wave's operands stay pinned by
+    its unfenced executions) plus one more wave of operand prefetch —
+    budgets below that degrade to synchronous staging instead of
+    exceeding the budget, and the pipelined depth picker deepens until
+    the slot fits."""
     m = k = n = 192
     per_leaf = leaf_bytes(m, k, n, 2, np.float32)
+    slot = pipelined_leaf_bytes(m, k, n, 2, np.float32)
+    # the slot exceeds 2x one leaf by exactly one wave of operand bytes
+    assert 2 * per_leaf < slot < 3 * per_leaf
     a, b = _rand((m, k)), _rand((k, n))
-    budget = 2 * per_leaf - 1  # one leaf fits; a pipelined slot does not
+    # Regression (review): a 2x-leaf budget — the old slot size — cannot
+    # hold the pipelined peak; the scheduler must run synchronously.
     out, stats = strassen_oot_matmul(
-        a, b, depth=2, budget_bytes=budget, backend=NAIVE_LEAVES
+        a, b, depth=2, budget_bytes=2 * per_leaf, backend=NAIVE_LEAVES
     )
     assert _rel_err(out, a @ b) < 2e-3
-    assert not stats.prefetch and stats.wave_size == 1
+    assert not stats.prefetch and stats.wave_size == 2
     assert stats.overlap_efficiency == 0.0
     stats.assert_within_budget()
-    assert min_depth_for_budget(m, k, n, budget, np.float32) == 2
-    assert min_depth_for_budget(m, k, n, budget, np.float32, pipelined=True) == 3
-    assert (
-        min_depth_for_budget(m, k, n, 2 * per_leaf, np.float32, pipelined=True) == 2
-    )
+    assert min_depth_for_budget(m, k, n, 2 * per_leaf, np.float32) == 2
+    assert min_depth_for_budget(m, k, n, 2 * per_leaf, np.float32, pipelined=True) == 3
+    assert min_depth_for_budget(m, k, n, slot, np.float32, pipelined=True) == 2
     # a doctored peak trips the budget assertion
     stats.peak_device_bytes = stats.budget_bytes + 1
     with pytest.raises(AssertionError, match="exceeded the budget"):
@@ -397,9 +408,11 @@ def test_oot_failing_leaf_cleans_caller_store_and_device_buffers(
 ):
     """A leaf failure mid-pipeline (prefetched wave in flight) must not
     leak: every block the run created is dropped from a caller-provided
-    store (spilled npy files included), unrelated keys survive, and the
-    in-flight device buffers are released even while the exception's
-    traceback still pins the scheduler frame."""
+    store (spilled npy files included), unrelated keys survive — other
+    runs' blocks under the same "A:"/"B:"/"C:" tag space included, since
+    tags are not run-scoped — and the in-flight device buffers are
+    released even while the exception's traceback still pins the
+    scheduler frame."""
     import jax
 
     a, b = _rand((96, 96)), _rand((96, 96))
@@ -409,6 +422,10 @@ def test_oot_failing_leaf_cleans_caller_store_and_device_buffers(
     )
     keep = np.ones((2, 2), np.float32)
     store.put((0, 0, "keep"), keep)
+    # another (interleaved/earlier) scheduler run's block: tag-prefix
+    # matching would destroy it, per-run key tracking must not
+    foreign = np.full((2, 2), 7.0, np.float32)
+    store.put((99, 99, "A:0"), foreign)
     _inject_failing_leaf(monkeypatch, fail_at=5)
     baseline = sum(not x.is_deleted() for x in jax.live_arrays())
     with pytest.raises(RuntimeError, match="injected leaf failure") as excinfo:
@@ -420,10 +437,12 @@ def test_oot_failing_leaf_cleans_caller_store_and_device_buffers(
     # references are alive — release must have been explicit
     assert excinfo.traceback
     assert sum(not x.is_deleted() for x in jax.live_arrays()) <= baseline
-    assert [kk for kk in store.keys() if kk[2][:2] in ("A:", "B:", "C:")] == []
+    leftover = [kk for kk in store.keys() if kk[2][:2] in ("A:", "B:", "C:")]
+    assert leftover == [(99, 99, "A:0")]
     np.testing.assert_array_equal(np.asarray(store.get((0, 0, "keep"))), keep)
+    np.testing.assert_array_equal(np.asarray(store.get((99, 99, "A:0"))), foreign)
     if store_kind == "memmap":
-        assert len(os.listdir(store.root)) == 1  # only the unrelated key
+        assert len(os.listdir(store.root)) == 2  # only the unrelated keys
     store.close()
 
 

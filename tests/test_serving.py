@@ -68,8 +68,19 @@ def test_engine_scopes_autotune_telemetry(setup):
     # pollute the process log the way a previous engine's resolutions would
     autotune.autotune(4096, 4096, 4096, calibration=calib, cache=TuningCache())
     assert autotune.get_telemetry().snapshot()["cache_misses"] >= 1
+    # ... and the process-global oot ring the way a previous engine's
+    # strassen_oot runs would
+    from repro.blocks.scheduler import recent_oot_stats, strassen_oot_matmul
+    from repro.core.backend import MatmulBackend
+
+    a = np.ones((64, 64), np.float32)
+    strassen_oot_matmul(
+        a, a, depth=1, budget_bytes=a.nbytes * 4,
+        backend=MatmulBackend(kind="naive"),
+    )
+    assert recent_oot_stats()
     eng = Engine(cfg, params, ServeConfig(max_seq=64))
     snap = eng.autotune_stats()
     assert snap["cache_hits"] == 0 and snap["cache_misses"] == 0
     assert snap["decisions"] == []
-    assert isinstance(snap["oot"], list)
+    assert snap["oot"] == []
