@@ -18,6 +18,7 @@ def main() -> None:
         fig11_stagewise,
         fig12_scalability,
         roofline_table,
+        serve_load,
         strassen_hlo,
         table6_single_node,
         table7_leaf,
@@ -35,6 +36,7 @@ def main() -> None:
         "fig12": fig12_scalability.run,
         "hlo": strassen_hlo.run,
         "roofline": roofline_table.run,
+        "serve_load": serve_load.run,
     }
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,8 +1,15 @@
-"""Batched serving demo: prefill a prompt batch, decode with a KV cache.
+"""Continuous-batching serving demo: submit, stream, evict.
+
+Submits a handful of mixed-length requests to the request-based engine,
+streams tokens as they arrive (per-token callback + the stream()
+iterator), cancels one request mid-decode, and prints the scheduler's
+pool accounting at the end.
 
 Uses the smoke-size recurrentgemma config so the run also exercises the
-ring-buffer local-attention cache and RG-LRU state. Swap --arch for any
-of the 10 assigned architectures.
+ring-buffer local-attention cache and RG-LRU state alongside the paged
+full-attention pool of attention archs. Swap --arch for any of the 10
+assigned architectures (whisper, the encoder-decoder arch, serves
+through the legacy engine.generate path instead).
 
 Run: PYTHONPATH=src python examples/serve.py [--arch phi4_mini_3_8b]
 """
@@ -10,32 +17,87 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import model as M
-from repro.models.frontends import make_stub_frames
 from repro.serving.engine import Engine, ServeConfig
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="recurrentgemma_9b", choices=list(ARCH_IDS))
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--prompt-len", type=int, default=32)
-ap.add_argument("--new-tokens", type=int, default=32)
+ap.add_argument("--requests", type=int, default=5)
+ap.add_argument("--new-tokens", type=int, default=24)
 args = ap.parse_args()
 
 cfg = get_smoke_config(args.arch)
 key = jax.random.PRNGKey(0)
 params = M.init_params(cfg, key)
-engine = Engine(cfg, params, ServeConfig(max_seq=256, temperature=0.8))
+engine = Engine(
+    cfg,
+    params,
+    ServeConfig(
+        max_seq=256,
+        temperature=0.8,
+        slots=3,  # decode bucket width: requests resident at once
+        page_size=16,  # paged KV pool granularity (full-attention layers)
+        sync_interval=4,  # host fetches tokens every 4 decode steps
+    ),
+)
 
-prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
-frames = make_stub_frames(cfg, args.batch) if cfg.frontend == "audio_stub" else None
+if cfg.is_encdec:
+    # whisper: encoder-decoder serving stays on the legacy batched path
+    from repro.models.frontends import make_stub_frames
 
+    prompts = jax.random.randint(key, (4, 8), 0, cfg.vocab)
+    tokens, stats = engine.generate(
+        prompts, args.new_tokens, frames=make_stub_frames(cfg, 4)
+    )
+    print(f"arch={cfg.name} (encdec legacy path) generated {tokens.shape}")
+    print("stats:", stats)
+    raise SystemExit(0)
+
+rng = np.random.default_rng(0)
 t0 = time.perf_counter()
-tokens, stats = engine.generate(prompts, args.new_tokens, frames=frames)
+
+
+def on_token(handle, event):
+    if event.index == 0:
+        print(f"  [{time.perf_counter() - t0:6.2f}s] req {event.request_id}: "
+              f"first token {event.token}")
+
+
+# mixed prompt/output lengths: the scheduler packs the decode bucket and
+# backfills slots as short requests finish
+handles = [
+    engine.submit(
+        rng.integers(0, cfg.vocab, size=int(rng.integers(4, 17))),
+        args.new_tokens + int(rng.integers(0, 16)),
+        on_token=on_token,
+    )
+    for _ in range(args.requests)
+]
+victim = handles[-1]
+
+n_events = 0
+for ev in engine.stream(handles):
+    n_events += 1
+    if n_events == 10 and not victim.done:
+        victim.cancel()  # mid-decode eviction: pages return to the pool
+        print(f"  evicted req {victim.id} after {len(victim.tokens())} tokens")
+
 dt = time.perf_counter() - t0
-n_gen = tokens.shape[0] * tokens.shape[1]
-print(f"arch={cfg.name} generated {tokens.shape} tokens in {dt:.2f}s "
-      f"({n_gen/dt:.1f} tok/s incl. compile)")
-print("sample:", tokens[0, :16].tolist())
-print("stats:", stats)
+for h in handles:
+    ttft, gaps = h.latency_stats()
+    mean_tpot = float(np.mean(gaps)) if gaps else 0.0
+    ttft_s = f"{ttft:.3f}s" if ttft is not None else "-"
+    print(
+        f"req {h.id}: {h.state.value:8s} reason={h.finish_reason:8s} "
+        f"tokens={len(h.tokens()):3d} ttft={ttft_s} tpot={mean_tpot * 1e3:.1f}ms"
+    )
+print(f"\n{n_events} tokens streamed in {dt:.2f}s ({n_events / dt:.1f} tok/s "
+      f"incl. compile)")
+st = engine.serve_stats()
+print(f"pool: {st.get('pages_in_use', 0)} pages in use / "
+      f"{st.get('page_budget', 0)} budget; "
+      f"requests={st['requests']}; decode_steps={st['decode_steps']}")
+print("sample:", handles[0].tokens()[:16])

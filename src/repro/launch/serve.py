@@ -39,6 +39,20 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # continuous-batching surface (ServeConfig)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode bucket width (requests resident at once)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page in the paged pool")
+    ap.add_argument("--page-budget", type=int, default=0,
+                    help="usable KV pages; 0 = slots * ceil(max_seq/page_size)")
+    ap.add_argument("--admission", choices=["queue", "reject"], default="queue")
+    ap.add_argument("--sync-interval", type=int, default=4,
+                    help="decode steps between host<->device token syncs")
+    ap.add_argument("--batching", choices=["continuous", "static"],
+                    default="continuous",
+                    help="scheduler: continuous admits mid-decode; static "
+                    "gang-schedules full batches (baseline)")
     ap.add_argument("--mesh", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,8 +96,21 @@ def main():
         else:
             params = M.init_params(cfg, key)
 
+        # ServeConfig is the single serving-surface config; Engine applies
+        # it to the model config via ServeConfig.apply_to.
         engine = Engine(
-            cfg, params, ServeConfig(max_seq=args.max_seq, temperature=args.temperature)
+            cfg,
+            params,
+            ServeConfig(
+                max_seq=args.max_seq,
+                temperature=args.temperature,
+                slots=args.slots,
+                page_size=args.page_size,
+                page_budget=args.page_budget,
+                admission=args.admission,
+                sync_interval=args.sync_interval,
+                batching=args.batching,
+            ),
         )
         prompts = jax.random.randint(
             key, (args.batch, args.prompt_len), 0, cfg.vocab
@@ -91,14 +118,40 @@ def main():
         frames = (
             make_stub_frames(cfg, args.batch) if cfg.frontend == "audio_stub" else None
         )
+        if cfg.is_encdec or frames is not None:
+            # encoder-decoder archs serve through the legacy batched path
+            t0 = time.perf_counter()
+            tokens, stats = engine.generate(prompts, args.new_tokens, frames=frames)
+            dt = time.perf_counter() - t0
+            n = tokens.shape[0] * tokens.shape[1]
+            print(
+                f"arch={cfg.name} generated {tokens.shape} in {dt:.2f}s "
+                f"({n/dt:.1f} tok/s incl. compile); stats={stats}"
+            )
+            return
+        # request API: submit the batch as independent requests (staggered
+        # lengths) and let the scheduler pack the decode bucket
+        import numpy as np
+
+        prompts_np = np.asarray(prompts)
         t0 = time.perf_counter()
-        tokens, stats = engine.generate(prompts, args.new_tokens, frames=frames)
+        handles = [
+            engine.submit(prompts_np[i], args.new_tokens + (i % 3))
+            for i in range(args.batch)
+        ]
+        n = len(list(engine.stream(handles)))
         dt = time.perf_counter() - t0
-        n = tokens.shape[0] * tokens.shape[1]
+        for h in handles:
+            ttft, _ = h.latency_stats()
+            print(
+                f"  req {h.id}: {h.state.value} ({h.finish_reason}) "
+                f"{len(h.tokens())} tokens, ttft={ttft:.3f}s"
+            )
         print(
-            f"arch={cfg.name} generated {tokens.shape} in {dt:.2f}s "
-            f"({n/dt:.1f} tok/s incl. compile); stats={stats}"
+            f"arch={cfg.name} served {len(handles)} requests / {n} tokens "
+            f"in {dt:.2f}s ({n/dt:.1f} tok/s incl. compile)"
         )
+        print(f"serve_stats: {engine.serve_stats()}")
 
 
 import contextlib

@@ -133,12 +133,16 @@ def decode_attention(
     """One-token attention against a cache: q (B, Hq, 1, d), cache (B, Hkv, S, d).
 
     Positions > pos (unwritten cache) and, with a window, <= pos - window
-    are masked.
+    are masked. ``pos`` is a scalar (lockstep batch) or (B,) / (B, 1)
+    per-row positions (continuous-batching slots).
     """
     b, hq, one, d = q.shape
     _, hkv, s, _ = k_cache.shape
     g = hq // hkv
     scale = scale if scale is not None else d**-0.5
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        pos = pos[:, None]  # (B, 1) -> per-row mask rows
     # Keep the cache in its storage dtype; accumulate in fp32 via
     # preferred_element_type — upcasting the cache materializes a 2x-cache
     # fp32 temp, the dominant decode HBM cost.
@@ -211,6 +215,17 @@ def _project_qkv(params, x, cfg: ModelConfig, positions):
     return q, k, v
 
 
+def _cache_write(cache: jax.Array, kv: jax.Array, pos, vec: bool) -> jax.Array:
+    """Write one token's K/V at ``pos``: lockstep (scalar pos, dynamic
+    update slice) or per-row (vector pos, one scatter per batch row —
+    the continuous-batching decode where every slot sits at its own
+    sequence position)."""
+    if not vec:
+        return jax.lax.dynamic_update_slice_in_dim(cache, kv, pos, axis=2)
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), :, pos, :].set(kv[:, :, 0, :])
+
+
 def attention_block(
     params,
     x: jax.Array,
@@ -241,19 +256,20 @@ def attention_block(
         k = k.astype(cache["k"].dtype) if cache["k"].dtype != k.dtype else k
         v = v.astype(cache["v"].dtype) if cache["v"].dtype != v.dtype else v
     if cache is not None and s == 1:
+        vec = jnp.ndim(cache_pos) == 1  # per-row write positions (slot batch)
         if ring:
             w_size = cache["k"].shape[2]
             slot = cache_pos % w_size
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+            kc = _cache_write(cache["k"], k, slot, vec)
+            vc = _cache_write(cache["v"], v, slot, vec)
             new_cache = {"k": kc, "v": vc}
             # every resident token is in-window by construction; mask only
             # the not-yet-written slots before the first wrap.
             pos_eff = jnp.minimum(cache_pos, w_size - 1)
             out = decode_attention(q, kc, vc, pos_eff, window=None)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, axis=2)
+            kc = _cache_write(cache["k"], k, cache_pos, vec)
+            vc = _cache_write(cache["v"], v, cache_pos, vec)
             new_cache = {"k": kc, "v": vc}
             out = decode_attention(q, kc, vc, cache_pos, window=window)
     else:

@@ -241,9 +241,18 @@ def forward(
         x = tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
     b, s = x.shape[0], x.shape[1]
 
+    # cache["pos"] is scalar for lockstep batches, or (B,) for the
+    # continuous-batching engine's slot-indexed decode (each slot at its
+    # own sequence position).
     cache_pos = cache["pos"] if cache is not None else None
     if positions is None:
-        base = jnp.arange(s)[None, :] + (cache_pos if cache_pos is not None else 0)
+        if cache_pos is None:
+            off = 0
+        elif cache_pos.ndim == 1:
+            off = cache_pos[:, None]  # (B, 1) broadcasts over seq
+        else:
+            off = cache_pos
+        base = jnp.arange(s)[None, :] + off
         positions = jnp.broadcast_to(base, (b, s))
         if cfg.mrope:
             positions = jnp.broadcast_to(positions[..., None], (b, s, 3))

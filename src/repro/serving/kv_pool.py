@@ -1,0 +1,402 @@
+"""Paged KV-cache pool for the continuous-batching serving engine.
+
+Two layers, mirroring the blocks arena allocator's split between a host
+free-list and device storage:
+
+* :class:`PagePool` — host-side page accounting. A fixed budget of
+  interchangeable pages with a free list (the ``ArenaStore`` design from
+  ``repro.blocks.blockmatrix``, re-applied to KV pages). Page id 0 is a
+  reserved scratch page: dead decode slots and padding writes are routed
+  there so the jitted step never needs a branch.
+* :class:`CacheLayout` — the bridge between the model's dense serving
+  cache pytree (``transformer.init_cache``) and pooled device storage.
+  It classifies every cache subtree by its layer kind:
+
+  - full-attention KV (``attn``, or ``local_attn`` with window 0) is
+    **paged**: one pool tensor of shape ``(P, Hkv, page_size, hd)``
+    (scan-stacked groups carry a leading group axis) shared by all
+    slots, addressed through a per-slot page table;
+  - ring-buffer local attention and recurrent state (mlstm / slstm /
+    rglru) are **slot-indexed**: O(window) / O(1) per slot, so they stay
+    dense at ``batch == n_slots``.
+
+  The jitted decode step gathers a slot's pages into a contiguous
+  bucketed view, runs the ordinary model decode, then scatters the one
+  written column back — so heterogeneous sequence lengths share the
+  device budget instead of each padding to ``max_seq``, while the model
+  code stays unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import _init_layer_cache
+
+__all__ = ["PoolExhausted", "PagePool", "CacheLayout", "SCRATCH_PAGE"]
+
+# Page id 0 never holds request state: dead slots scatter into it and
+# unwritten page-table entries gather from it (masked out by position).
+SCRATCH_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by PagePool.alloc when the request cannot be satisfied."""
+
+
+class PagePool:
+    """Host-side free-list over a fixed budget of interchangeable pages.
+
+    Pages are plain ints in ``[1, capacity]`` (0 is the scratch page).
+    Same discipline as the blocks arena allocator: O(1) alloc/free, a
+    double-free guard, and exact accounting so eviction leaks surface
+    immediately in tests.
+    """
+
+    def __init__(self, capacity: int, page_size: int):
+        if capacity < 0:
+            raise ValueError(f"page capacity must be >= 0, got {capacity}")
+        if page_size <= 0:
+            raise ValueError(f"page_size must be > 0, got {page_size}")
+        self.capacity = int(capacity)
+        self.page_size = int(page_size)
+        self._free = deque(range(1, capacity + 1))
+        self._in_use: set = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.page_size)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free of {self.capacity}"
+            )
+        pages = [self._free.popleft() for _ in range(n)]
+        self._in_use.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p == SCRATCH_PAGE:
+                raise ValueError("scratch page cannot be freed")
+            if p not in self._in_use:
+                raise ValueError(f"double free / foreign page {p}")
+            self._in_use.remove(p)
+            self._free.append(p)
+
+
+# --------------------------------------------------------------- layout
+
+
+@dataclasses.dataclass(frozen=True)
+class _Node:
+    """One cache subtree: where it lives and how it is stored."""
+
+    where: str  # "groups" | "tail"
+    key: Any  # "pos{j}" or tail index
+    kind: str  # layer kind from cfg.block_pattern
+    stacked: bool  # True -> leading scan-group axis
+    paged: bool  # True -> attn KV routed through the page pool
+
+
+def _is_paged(cfg: ModelConfig, kind: str) -> bool:
+    # local_attn with window 0 degenerates to full attention (see
+    # transformer._apply_layer); a real window is a fixed-size ring.
+    return kind == "attn" or (kind == "local_attn" and not cfg.local_window)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheLayout:
+    """Static description of how a config's serving cache maps to pools.
+
+    Built once per engine; all methods are pure shape-level functions,
+    safe to close over in jitted step bodies.
+    """
+
+    cfg: ModelConfig
+    n_slots: int
+    page_size: int
+    max_seq: int
+
+    @property
+    def table_width(self) -> int:
+        """Max pages a single slot can reference (covers max_seq)."""
+        return -(-self.max_seq // self.page_size)
+
+    @property
+    def nodes(self) -> Tuple[_Node, ...]:
+        cfg = self.cfg
+        period = len(cfg.block_pattern)
+        n_groups = cfg.n_layers // period
+        n_tail = cfg.n_layers - n_groups * period
+        out: List[_Node] = []
+        if n_groups:
+            for j in range(period):
+                kind = cfg.block_pattern[j]
+                out.append(
+                    _Node("groups", f"pos{j}", kind, True, _is_paged(cfg, kind))
+                )
+        for i in range(n_tail):
+            kind = cfg.block_pattern[i % period]
+            out.append(_Node("tail", i, kind, False, _is_paged(cfg, kind)))
+        return tuple(out)
+
+    @property
+    def has_paged(self) -> bool:
+        return any(n.paged for n in self.nodes)
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // len(self.cfg.block_pattern)
+
+    def _cache_dtype(self):
+        cfg = self.cfg
+        return (
+            jnp.dtype(cfg.cache_dtype) if cfg.cache_dtype else jnp.dtype(cfg.dtype)
+        )
+
+    def _sub(self, tree: Dict[str, Any], node: _Node) -> Any:
+        return tree[node.where][node.key]
+
+    def _set_sub(self, tree: Dict[str, Any], node: _Node, value: Any) -> None:
+        tree[node.where][node.key] = value
+
+    def _iter_nodes(
+        self, *trees: Dict[str, Any]
+    ) -> Iterator[Tuple[_Node, Tuple[Any, ...]]]:
+        for node in self.nodes:
+            yield node, tuple(self._sub(t, node) for t in trees)
+
+    # ------------------------------------------------------------ init
+
+    def init_kv_state(self, n_pages: int) -> Dict[str, Any]:
+        """Persistent device state: pools for paged KV, slot arrays else.
+
+        ``n_pages`` is the usable page budget; the pool tensor holds one
+        extra scratch page at index 0.
+        """
+        cfg = self.cfg
+        dtype = self._cache_dtype()
+        p_total = n_pages + 1  # + scratch
+        kv_shape = (p_total, cfg.n_kv_heads, self.page_size, cfg.head_dim)
+        state: Dict[str, Any] = {"groups": {}, "tail": {}}
+        for node in self.nodes:
+            if node.paged:
+                shape = ((self.n_groups,) + kv_shape) if node.stacked else kv_shape
+                sub = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+            else:
+                sub = self._slot_state(node, self.n_slots)
+            self._set_sub(state, node, sub)
+        return state
+
+    def _slot_state(self, node: _Node, batch: int) -> Any:
+        cfg = self.cfg
+        dtype = self._cache_dtype()
+        if node.stacked:
+            per = [
+                _init_layer_cache(cfg, node.kind, batch, self.max_seq, dtype)
+                for _ in range(self.n_groups)
+            ]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        return _init_layer_cache(cfg, node.kind, batch, self.max_seq, dtype)
+
+    def init_prefill_cache(self, capacity: int) -> Dict[str, Any]:
+        """Batch-1 dense cache for one request's prefill.
+
+        Paged-attn entries are sized to the bucketed prompt ``capacity``
+        (a multiple of page_size, so they reshape exactly into pages);
+        ring/recurrent entries match the persistent slot layout so the
+        insert step is a plain row write.
+        """
+        assert capacity % self.page_size == 0, (capacity, self.page_size)
+        cfg = self.cfg
+        dtype = self._cache_dtype()
+        cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32), "groups": {}, "tail": {}}
+        for node in self.nodes:
+            seq = capacity if node.paged else self.max_seq
+            if node.stacked:
+                per = [
+                    _init_layer_cache(cfg, node.kind, 1, seq, dtype)
+                    for _ in range(self.n_groups)
+                ]
+                sub = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+            else:
+                sub = _init_layer_cache(cfg, node.kind, 1, seq, dtype)
+            self._set_sub(cache, node, sub)
+        if not cache["groups"]:
+            del cache["groups"]
+        if not cache["tail"]:
+            del cache["tail"]
+        else:
+            cache["tail"] = [cache["tail"][i] for i in range(len(cache["tail"]))]
+        return cache
+
+    # ------------------------------------------------------- structure
+
+    def _as_model_cache(self, tree: Dict[str, Any], pos: jax.Array) -> Dict[str, Any]:
+        """Re-shape an internal {groups,tail} dict into the model's cache
+        pytree (tail as a list, empty containers dropped, pos added)."""
+        cache: Dict[str, Any] = {"pos": pos}
+        if tree["groups"]:
+            cache["groups"] = tree["groups"]
+        if tree["tail"]:
+            cache["tail"] = [tree["tail"][i] for i in range(len(tree["tail"]))]
+        return cache
+
+    # ---------------------------------------------------------- gather
+
+    def gather(
+        self,
+        kv_state: Dict[str, Any],
+        page_table: jax.Array,  # (n_slots, table_width) int32
+        pos: jax.Array,  # (n_slots,) int32
+        bucket_pages: int,
+    ) -> Dict[str, Any]:
+        """Materialize the dense decode view: each slot's first
+        ``bucket_pages`` pages, contiguous along the seq axis."""
+        table_b = page_table[:, :bucket_pages]
+        dense: Dict[str, Any] = {"groups": {}, "tail": {}}
+        for node, (sub,) in self._iter_nodes(kv_state):
+            if node.paged:
+                out = {
+                    name: self._gather_leaf(pool, table_b, node.stacked)
+                    for name, pool in sub.items()
+                }
+            else:
+                out = sub  # slot-indexed already
+            self._set_sub(dense, node, out)
+        return self._as_model_cache(dense, pos)
+
+    def _gather_leaf(self, pool: jax.Array, table_b: jax.Array, stacked: bool):
+        ps = self.page_size
+        b, bp = table_b.shape
+        if stacked:
+            g = jnp.take(pool, table_b, axis=1)  # (G, B, bp, H, ps, d)
+            g = jnp.moveaxis(g, 3, 2)  # (G, B, H, bp, ps, d)
+            gg, _, h, _, _, d = g.shape
+            return g.reshape(gg, b, h, bp * ps, d)
+        g = jnp.take(pool, table_b, axis=0)  # (B, bp, H, ps, d)
+        g = jnp.moveaxis(g, 2, 1)  # (B, H, bp, ps, d)
+        _, h, _, _, d = g.shape
+        return g.reshape(b, h, bp * ps, d)
+
+    # --------------------------------------------------------- scatter
+
+    def scatter_token(
+        self,
+        kv_state: Dict[str, Any],
+        new_dense: Dict[str, Any],
+        page_table: jax.Array,
+        pos: jax.Array,  # (n_slots,) position written this step
+        live: jax.Array,  # (n_slots,) bool
+    ) -> Dict[str, Any]:
+        """Commit one decode step: write each live slot's new KV column
+        into its page; freeze slot-indexed state of dead slots."""
+        ps = self.page_size
+        page_idx = jnp.take_along_axis(
+            page_table, (pos // ps)[:, None], axis=1
+        )[:, 0]
+        page_idx = jnp.where(live, page_idx, SCRATCH_PAGE)
+        off = pos % ps
+        new_tail = new_dense.get("tail", [])
+        new_groups = new_dense.get("groups", {})
+        new_internal = {"groups": new_groups, "tail": dict(enumerate(new_tail))}
+        out: Dict[str, Any] = {"groups": {}, "tail": {}}
+        for node, (old, new) in self._iter_nodes(kv_state, new_internal):
+            if node.paged:
+                sub = {
+                    name: self._scatter_leaf(
+                        old[name], new[name], page_idx, off, pos, node.stacked
+                    )
+                    for name in old
+                }
+            else:
+                sub = jax.tree.map(
+                    lambda o, n: self._freeze(o, n, live, node.stacked), old, new
+                )
+            self._set_sub(out, node, sub)
+        return out
+
+    def _freeze(self, old, new, live, stacked: bool):
+        ax = 1 if stacked else 0
+        shape = [1] * old.ndim
+        shape[ax] = live.shape[0]
+        return jnp.where(live.reshape(shape), new, old)
+
+    def _scatter_leaf(self, pool, dense_new, page_idx, off, pos, stacked: bool):
+        # Pages were gathered from the table prefix in order, so view
+        # position == true position: the column written by this decode
+        # step sits at ``pos`` along the gathered seq axis.
+        b = pos.shape[0]
+        if stacked:
+            # dense_new: (G, B, H, L, d) -> written column (G, B, H, d)
+            col = jnp.take_along_axis(
+                dense_new, pos.reshape(1, b, 1, 1, 1), axis=3
+            )[:, :, :, 0, :]
+            vals = jnp.moveaxis(col, 1, 0)  # (B, G, H, d)
+            return pool.at[:, page_idx, :, off, :].set(vals)
+        # dense_new: (B, H, L, d) -> (B, H, d)
+        col = jnp.take_along_axis(
+            dense_new, pos.reshape(b, 1, 1, 1), axis=2
+        )[:, :, 0, :]
+        return pool.at[page_idx, :, off, :].set(col)
+
+    # ---------------------------------------------------------- insert
+
+    def insert_request(
+        self,
+        kv_state: Dict[str, Any],
+        prefill_cache: Dict[str, Any],
+        slot: jax.Array,  # scalar int32
+        page_ids: jax.Array,  # (capacity // page_size,) int32
+    ) -> Dict[str, Any]:
+        """Move a finished prefill (batch=1 dense cache) into the pool:
+        KV pages scattered to their allocated ids, slot state row-written."""
+        pre_tail = prefill_cache.get("tail", [])
+        pre = {
+            "groups": prefill_cache.get("groups", {}),
+            "tail": dict(enumerate(pre_tail)),
+        }
+        out: Dict[str, Any] = {"groups": {}, "tail": {}}
+        for node, (old, new) in self._iter_nodes(kv_state, pre):
+            if node.paged:
+                sub = {
+                    name: self._insert_leaf(old[name], new[name], page_ids, node.stacked)
+                    for name in old
+                }
+            else:
+                if node.stacked:
+                    sub = jax.tree.map(
+                        lambda o, n: o.at[:, slot].set(n[:, 0]), old, new
+                    )
+                else:
+                    sub = jax.tree.map(lambda o, n: o.at[slot].set(n[0]), old, new)
+            self._set_sub(out, node, sub)
+        return out
+
+    def _insert_leaf(self, pool, pre, page_ids, stacked: bool):
+        ps = self.page_size
+        nb = page_ids.shape[0]
+        if stacked:
+            # pre: (G, 1, H, C, d) -> (G, nb, H, ps, d)
+            g, _, h, c, d = pre.shape
+            vals = pre[:, 0].reshape(g, h, nb, ps, d)
+            vals = jnp.moveaxis(vals, 2, 1)
+            return pool.at[:, page_ids].set(vals)
+        _, h, c, d = pre.shape
+        vals = pre[0].reshape(h, nb, ps, d)
+        vals = jnp.moveaxis(vals, 1, 0)
+        return pool.at[page_ids].set(vals)

@@ -1,0 +1,192 @@
+"""Paged KV pool: free-list accounting, layout classification, round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.serving.kv_pool import SCRATCH_PAGE, CacheLayout, PagePool, PoolExhausted
+
+
+# ------------------------------------------------------------- PagePool
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagePool(capacity=8, page_size=16)
+    assert pool.available == 8 and pool.in_use == 0
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    assert len(a) == 3 and len(b) == 2
+    assert not set(a) & set(b)
+    assert SCRATCH_PAGE not in a + b  # id 0 is never handed out
+    assert pool.available == 3 and pool.in_use == 5
+    pool.free(a)
+    assert pool.available == 6 and pool.in_use == 2
+    c = pool.alloc(6)  # reuses the freed pages
+    assert pool.available == 0
+    pool.free(b + c)
+    assert pool.available == 8 and pool.in_use == 0
+
+
+def test_pool_exhaustion_raises_and_leaves_state_intact():
+    pool = PagePool(capacity=4, page_size=16)
+    pool.alloc(3)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)
+    assert pool.available == 1  # failed alloc took nothing
+
+
+def test_pool_double_free_guard():
+    pool = PagePool(capacity=4, page_size=16)
+    pages = pool.alloc(2)
+    pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free(pages)
+    with pytest.raises(ValueError):
+        pool.free([SCRATCH_PAGE])
+
+
+def test_pages_for_tokens():
+    pool = PagePool(capacity=4, page_size=16)
+    assert pool.pages_for_tokens(0) == 0
+    assert pool.pages_for_tokens(1) == 1
+    assert pool.pages_for_tokens(16) == 1
+    assert pool.pages_for_tokens(17) == 2
+
+
+# ----------------------------------------------------------- CacheLayout
+
+
+def _layout(name, **kw):
+    cfg = get_smoke_config(name)
+    args = dict(cfg=cfg, n_slots=2, page_size=8, max_seq=32)
+    args.update(kw)
+    return CacheLayout(**args)
+
+
+def test_layout_classifies_by_block_pattern():
+    # phi4 smoke: pure full attention -> every node paged
+    lay = _layout("phi4_mini_3_8b")
+    assert lay.has_paged
+    assert all(n.paged for n in lay.nodes)
+    assert all(n.kind == "attn" for n in lay.nodes)
+
+    # recurrentgemma smoke: rglru + windowed local_attn -> nothing paged
+    # (ring buffers and recurrent state stay slot-indexed dense)
+    lay = _layout("recurrentgemma_9b")
+    cfg = lay.cfg
+    assert cfg.local_window > 0
+    assert not any(n.paged for n in lay.nodes)
+    kinds = {n.kind for n in lay.nodes}
+    assert "rglru" in kinds and "local_attn" in kinds
+
+    # xlstm smoke: recurrent only -> no paged nodes at all
+    lay = _layout("xlstm_1_3b")
+    assert not lay.has_paged
+    assert {n.kind for n in lay.nodes} <= {"mlstm", "slstm"}
+
+
+def test_layout_node_count_covers_all_layers():
+    for name in ("phi4_mini_3_8b", "recurrentgemma_9b", "xlstm_1_3b"):
+        lay = _layout(name)
+        cfg = lay.cfg
+        period = len(cfg.block_pattern)
+        n_groups = cfg.n_layers // period
+        # stacked nodes carry n_groups layers each; tail nodes one each
+        covered = sum(n_groups if n.stacked else 1 for n in lay.nodes)
+        assert covered == cfg.n_layers
+
+
+def test_gather_scatter_insert_roundtrip():
+    """Prefill -> insert -> gather must reproduce the dense cache, and
+    scatter_token must land one column in the right page at the right
+    offset while routing dead slots to the scratch page."""
+    lay = _layout("phi4_mini_3_8b", n_slots=2, page_size=8, max_seq=32)
+    cfg = lay.cfg
+    pool = PagePool(capacity=lay.table_width * 2, page_size=8)
+    kv = lay.init_kv_state(pool.capacity)
+
+    # fake a filled prefill cache: capacity 16 = 2 pages, distinct values
+    capacity = 16
+    pre = lay.init_prefill_cache(capacity)
+    rng = np.random.default_rng(0)
+    pre = jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype)
+        if x.ndim > 1
+        else x,
+        pre,
+    )
+    pre["pos"] = jnp.asarray(12, jnp.int32)  # 12 real tokens in 2 pages
+
+    pages = pool.alloc(2)
+    kv = lay.insert_request(kv, pre, jnp.int32(0), jnp.asarray(pages, jnp.int32))
+    table = jnp.zeros((2, lay.table_width), jnp.int32)
+    table = table.at[0, :2].set(jnp.asarray(pages))
+
+    pos = jnp.asarray([12, 0], jnp.int32)
+    dense = lay.gather(kv, table, pos, bucket_pages=2)
+    # slot 0's gathered view equals the prefill cache contents
+    for node in lay.nodes:
+        sub_pre = pre[node.where][node.key]
+        sub_dense = dense[node.where][node.key]
+        for name in ("k", "v"):
+            got = np.asarray(sub_dense[name])
+            want = np.asarray(sub_pre[name])
+            if node.stacked:
+                np.testing.assert_allclose(got[:, 0], want[:, 0], rtol=0, atol=0)
+            else:
+                np.testing.assert_allclose(got[0], want[0], rtol=0, atol=0)
+
+    # scatter one token at pos 12 (page 1, offset 4) for live slot 0;
+    # slot 1 is dead and must only touch the scratch page
+    new_dense = jax.tree.map(lambda x: x + 1.0 if x.ndim > 1 else x, dense)
+    new_dense["pos"] = pos + 1
+    kv2 = lay.scatter_token(kv, new_dense, table, pos, jnp.asarray([True, False]))
+    for node in lay.nodes:
+        old_sub = kv[node.where][node.key]
+        new_sub = kv2[node.where][node.key]
+        for name in ("k", "v"):
+            o, n = np.asarray(old_sub[name]), np.asarray(new_sub[name])
+            if node.stacked:
+                page_axis_old = o[:, pages[1]]
+                page_axis_new = n[:, pages[1]]
+                # only offset 4 of slot 0's second page changed
+                diff = page_axis_new != page_axis_old
+                assert diff.any()
+                assert not diff[:, :, :4].any() and not diff[:, :, 5:].any()
+                # scratch page took slot 1's (masked) write; real pages of
+                # other slots untouched
+                untouched = [p for p in range(1, o.shape[1]) if p != pages[1]]
+                np.testing.assert_array_equal(n[:, untouched], o[:, untouched])
+            else:
+                diff = n[pages[1]] != o[pages[1]]
+                assert diff.any()
+                assert not diff[:, :4].any() and not diff[:, 5:].any()
+                untouched = [p for p in range(1, o.shape[0]) if p != pages[1]]
+                np.testing.assert_array_equal(n[untouched], o[untouched])
+
+
+def test_scatter_freezes_dead_slot_state():
+    """Slot-indexed (non-paged) state must keep dead slots bit-identical."""
+    lay = _layout("xlstm_1_3b", n_slots=3, page_size=8, max_seq=32)
+    kv = lay.init_kv_state(0)
+    rng = np.random.default_rng(1)
+    kv = jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), kv
+    )
+    new = jax.tree.map(lambda x: x + 1.0, kv)
+    new_model = lay._as_model_cache(new, jnp.asarray([1, 1, 1], jnp.int32))
+    live = jnp.asarray([True, False, True])
+    out = lay.scatter_token(kv, new_model, jnp.zeros((3, 4), jnp.int32),
+                            jnp.asarray([0, 0, 0], jnp.int32), live)
+    for node in lay.nodes:
+        o = kv[node.where][node.key]
+        n = out[node.where][node.key]
+        for ol, nl in zip(jax.tree.leaves(o), jax.tree.leaves(n)):
+            ol, nl = np.asarray(ol), np.asarray(nl)
+            if node.stacked:
+                np.testing.assert_array_equal(nl[:, 1], ol[:, 1])  # dead frozen
+                np.testing.assert_array_equal(nl[:, 0], ol[:, 0] + 1.0)
+            else:
+                np.testing.assert_array_equal(nl[1], ol[1])
+                np.testing.assert_array_equal(nl[0], ol[0] + 1.0)
