@@ -222,7 +222,14 @@ def main():
                          "forces >= 2 staging waves; non-zero exit on "
                          "parity drift > 1e-2 or a degenerate plan")
     ap.add_argument("--out", default="fig8_scaling.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the sweep here")
     args = ap.parse_args()
+
+    if args.trace_out:
+        from repro import obs
+
+        obs.configure(enabled=True)
 
     if args.smoke:
         payload = sweep(
@@ -247,6 +254,16 @@ def main():
         print(f"# {r['n']:>7} {r['depth']:>5} {r['waves']:>5} "
               f"{str(r['fits_on_device']):>5} {r['oot_s']:>9.4f} {sync:>9} "
               f"{r['overlap_efficiency']:>7.2f} {dense:>9} {err:>9}")
+
+    if args.trace_out:
+        # Written before the smoke gates so a failing run still uploads
+        # its trace as a CI artifact.
+        from repro import obs
+        from repro.obs import export
+
+        export.write_trace(args.trace_out, metrics=obs.get_metrics())
+        print(f"# wrote {args.trace_out} "
+              f"({len(obs.get_tracer().spans)} spans)", flush=True)
 
     if args.smoke:
         bad = [r for r in payload["rows"] if r["ok"] is False]

@@ -137,7 +137,12 @@ def run(
     seed: int = 0,
     smoke: bool = False,
     out: str = "",
+    trace_out: str = "",
 ) -> int:
+    if trace_out:
+        from repro import obs
+
+        obs.configure(enabled=True)
     # decode_pages pinned: both modes run the same fixed decode bucket,
     # so per-step cost is identical and the measured difference is purely
     # the scheduling policy (packing, not kernel shape).
@@ -151,8 +156,17 @@ def run(
         cfg, params, engine = _build(model, dict(serve_base, batching=mode))
         reqs = _workload(n_requests, cfg.vocab, seed)
         _drive(engine, reqs)  # warmup: absorb jit traces for this engine
+        engine.metrics.reset()  # drop the warmup's TTFT/TPOT samples
         stats = _drive(engine, reqs)
         stats["serve"] = engine.serve_stats()
+        # The same latencies, read back from the engine's obs histograms —
+        # the smoke gate below holds them to the per-request values.
+        for name, key in (("serve.ttft_s", "ttft"), ("serve.tpot_s", "tpot")):
+            hist = engine.metrics.histogram(name)
+            for q in (50, 99):
+                p = hist.percentile(q)
+                stats[f"obs_{key}_p{q}_s"] = 0.0 if p is None else p
+        stats["obs"] = engine.stats()["obs"]["metrics"]
         results[mode] = stats
         emit(
             f"serve_load/{mode}",
@@ -184,6 +198,11 @@ def run(
     if out:
         with open(out, "w") as f:
             json.dump(report, f, indent=1)
+    if trace_out:
+        from repro.obs import export
+
+        export.write_trace(trace_out, metrics=engine.metrics)
+        print(f"wrote {trace_out}")
 
     if smoke:
         failures = []
@@ -197,6 +216,15 @@ def run(
         for mode, st in results.items():
             if not (st["tpot_p50_s"] > 0 and st["tpot_p99_s"] >= st["tpot_p50_s"]):
                 failures.append(f"{mode}: degenerate latency percentiles")
+            # obs histograms must agree with the per-request latency_stats()
+            # derivation — same samples, same (numpy-linear) interpolation.
+            for key in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s"):
+                want, got = st[key], st[f"obs_{key}"]
+                if abs(got - want) > 1e-9 + 1e-6 * abs(want):
+                    failures.append(
+                        f"{mode}: obs histogram {key} {got:.6f}s disagrees "
+                        f"with latency_stats {want:.6f}s"
+                    )
         if failures:
             for f_ in failures:
                 print(f"SMOKE FAIL: {f_}")
@@ -213,6 +241,8 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="small run + gates")
     ap.add_argument("--out", default="", help="write full JSON report here")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace of the load run here")
     args = ap.parse_args()
     raise SystemExit(
         run(
@@ -222,6 +252,7 @@ def main() -> None:
             seed=args.seed,
             smoke=args.smoke,
             out=args.out,
+            trace_out=args.trace_out,
         )
     )
 

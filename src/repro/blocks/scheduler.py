@@ -39,22 +39,27 @@ device HBM playing the executor and the host store playing HDFS.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import List, Optional, Sequence, Tuple
+import threading
+import weakref
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.blocks import tags
 from repro.blocks.blockmatrix import BlockMatrix, BlockStore, make_store
 from repro.core.coefficients import Scheme, get_scheme
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracer as obs_tracer
 
 __all__ = [
     "OotStats",
+    "OotStatsRing",
     "StrassenScheduler",
     "strassen_oot_matmul",
     "leaf_bytes",
     "pipelined_leaf_bytes",
     "min_depth_for_budget",
+    "attach_stats_ring",
     "recent_oot_stats",
     "reset_oot_stats",
 ]
@@ -211,27 +216,77 @@ class OotStats:
         self.overlap_efficiency = max(0.0, min(1.0, 1.0 - exposed / total))
 
 
-# Ring of the most recent OotStats (as dicts) this process produced —
-# the out-of-core analogue of autotune's decision telemetry, surfaced by
-# ``Engine.autotune_stats()`` and the benchmarks. Bounded so a long
-# sweep cannot grow host memory.
-_RECENT_STATS: List[dict] = []
-_RECENT_STATS_MAX = 64
+class OotStatsRing:
+    """Bounded, thread-safe ring of recent OotStats dicts (oldest first).
+
+    Every completed out-of-core run is appended to **all** registered
+    rings. The module keeps one default ring behind the legacy
+    ``recent_oot_stats()`` / ``reset_oot_stats()`` API; consumers that
+    must not observe (or clobber) each other — e.g. two concurrently
+    running serving Engines — attach their own via
+    :func:`attach_stats_ring` and read/clear only that.
+    """
+
+    def __init__(self, maxlen: int = 64) -> None:
+        self.maxlen = maxlen
+        self._lock = threading.Lock()
+        self._items: List[dict] = []
+
+    def append(self, item: dict) -> None:
+        with self._lock:
+            self._items.append(item)
+            if len(self._items) > self.maxlen:
+                del self._items[: len(self._items) - self.maxlen]
+
+    def snapshot(self) -> List[dict]:
+        with self._lock:
+            return list(self._items)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._items.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+# The default ring (legacy module-level API) plus any attached consumer
+# rings. WeakSet: an Engine's ring unregisters when the engine is
+# collected — there is no explicit close() on that surface.
+_DEFAULT_RING = OotStatsRing()
+_RINGS: "weakref.WeakSet[OotStatsRing]" = weakref.WeakSet([_DEFAULT_RING])
+_RINGS_LOCK = threading.Lock()
+
+
+def attach_stats_ring(maxlen: int = 64) -> OotStatsRing:
+    """New consumer-owned ring, subscribed to every future run's stats.
+
+    The caller must hold the returned ring (registration is weak);
+    clearing it does not disturb the default ring or other consumers.
+    """
+    ring = OotStatsRing(maxlen)
+    with _RINGS_LOCK:
+        _RINGS.add(ring)
+    return ring
 
 
 def recent_oot_stats() -> List[dict]:
     """Stats dicts of this process's recent out-of-core runs (oldest first)."""
-    return list(_RECENT_STATS)
+    return _DEFAULT_RING.snapshot()
 
 
 def reset_oot_stats() -> None:
-    _RECENT_STATS.clear()
+    """Clear the **default** ring only; attached rings are unaffected."""
+    _DEFAULT_RING.clear()
 
 
 def _record_run(stats: OotStats) -> None:
-    _RECENT_STATS.append(stats.to_dict())
-    if len(_RECENT_STATS) > _RECENT_STATS_MAX:
-        del _RECENT_STATS[: len(_RECENT_STATS) - _RECENT_STATS_MAX]
+    d = stats.to_dict()
+    with _RINGS_LOCK:
+        rings = list(_RINGS)
+    for ring in rings:
+        ring.append(d)
 
 
 class _RunTrackingStore(BlockStore):
@@ -432,7 +487,16 @@ class StrassenScheduler:
         """
         import jax
 
-        t_start = time.perf_counter()
+        # Spans are the run's single timing source: OotStats (wave_events,
+        # phase splits, overlap_efficiency) is DERIVED from them after the
+        # fact. When the process tracer is exporting, the spans land there
+        # (the trace renders the recursion tree, tag-addressed); otherwise
+        # a throwaway run-local tracer carries them just far enough to
+        # populate the stats.
+        tr = obs_tracer.get_tracer()
+        if not tr.enabled:
+            tr = obs_tracer.Tracer(enabled=True)
+        mx = obs_metrics.get_metrics()
         a = np.asarray(a)
         b = np.asarray(b)
         if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
@@ -507,6 +571,12 @@ class StrassenScheduler:
         store = make_store(store, slot_bytes=slot_bytes, root=store_root)
         if not owned_store:
             store = _RunTrackingStore(store)
+        root_span = tr.begin(
+            "oot.matmul", cat="oot",
+            m=m, k=k, n=n, depth=depth, scheme=self.scheme.name,
+            budget_bytes=self.budget_bytes,
+        )
+        t_start = root_span.t0
         # Device arrays in flight per wave index — defined out here so the
         # failure path below can release them even when the exception's
         # traceback keeps the frame (and so these references) alive.
@@ -530,34 +600,57 @@ class StrassenScheduler:
                 b, (bak, bbn), store, self._node_tag("B", ()), shape=(pk, pn)
             )
 
-            # --- divide: level-order, all rank^level nodes per level.
-            t0 = time.perf_counter()
+            # --- divide: level-order, all rank^level nodes per level. One
+            # span per level, one tag-addressed span per tree node — the
+            # exported trace's top lane reads as the recursion tree itself.
+            div_span = tr.begin("oot.divide", cat="oot")
             for level in range(depth):
                 p_dtype = dtype if level == 0 else acc_dtype
-                for path in tags.leaf_paths(level, rank):
-                    pa = self._node(store, "A", path, (pm, pk), (bam, bak), p_dtype)
-                    pb = self._node(store, "B", path, (pk, pn), (bak, bbn), p_dtype)
-                    for p in range(rank):
-                        ca = self._node(
-                            store, "A", tags.child(path, p, rank), (pm, pk),
-                            (bam, bak), acc_dtype,
-                        )
-                        cb = self._node(
-                            store, "B", tags.child(path, p, rank), (pk, pn),
-                            (bak, bbn), acc_dtype,
-                        )
-                        self._divide_child(pa, ca, self.scheme.a_coef[p], acc_dtype)
-                        self._divide_child(pb, cb, self.scheme.b_coef[p], acc_dtype)
-                stats.host_store_peak_bytes = max(
-                    stats.host_store_peak_bytes, store.nbytes()
-                )
-                # Parents are consumed: only the leaf level feeds the multiply.
-                # Freed via the node's own key iteration (O(blocks-of-node)),
-                # not delete_tag's full-store key scan.
-                for path in tags.leaf_paths(level, rank):
-                    self._node(store, "A", path, (pm, pk), (bam, bak), p_dtype).free()
-                    self._node(store, "B", path, (pk, pn), (bak, bbn), p_dtype).free()
-            stats.divide_s = time.perf_counter() - t0
+                with tr.span(
+                    f"divide.L{level + 1}", cat="oot",
+                    level=level + 1, nodes=rank ** (level + 1),
+                ):
+                    for path in tags.leaf_paths(level, rank):
+                        with tr.span(
+                            "divide.node", cat="oot",
+                            tag=tags.to_string(path), level=level,
+                        ):
+                            pa = self._node(
+                                store, "A", path, (pm, pk), (bam, bak), p_dtype
+                            )
+                            pb = self._node(
+                                store, "B", path, (pk, pn), (bak, bbn), p_dtype
+                            )
+                            for p in range(rank):
+                                ca = self._node(
+                                    store, "A", tags.child(path, p, rank), (pm, pk),
+                                    (bam, bak), acc_dtype,
+                                )
+                                cb = self._node(
+                                    store, "B", tags.child(path, p, rank), (pk, pn),
+                                    (bak, bbn), acc_dtype,
+                                )
+                                self._divide_child(
+                                    pa, ca, self.scheme.a_coef[p], acc_dtype
+                                )
+                                self._divide_child(
+                                    pb, cb, self.scheme.b_coef[p], acc_dtype
+                                )
+                    stats.host_store_peak_bytes = max(
+                        stats.host_store_peak_bytes, store.nbytes()
+                    )
+                    # Parents are consumed: only the leaf level feeds the
+                    # multiply. Freed via the node's own key iteration
+                    # (O(blocks-of-node)), not delete_tag's full-store scan.
+                    for path in tags.leaf_paths(level, rank):
+                        self._node(
+                            store, "A", path, (pm, pk), (bam, bak), p_dtype
+                        ).free()
+                        self._node(
+                            store, "B", path, (pk, pn), (bak, bbn), p_dtype
+                        ).free()
+            tr.end(div_span)
+            stats.divide_s = div_span.duration
             stats.host_store_peak_bytes = max(stats.host_store_peak_bytes, store.nbytes())
 
             # --- leaf waves: a 2-deep async pipeline over stage -> dispatch
@@ -570,40 +663,70 @@ class StrassenScheduler:
             # bytes land on host (donated into the host-side combine
             # accumulation), keeping the device peak at the budgeted
             # pipelined slot.
-            t0 = time.perf_counter()
+            leaf_span = tr.begin(
+                "oot.leaf_waves", cat="oot",
+                waves=_ceil_div(leaves, wave_size), wave_size=wave_size,
+                prefetch=prefetch,
+            )
             leaf_list = list(tags.leaf_paths(depth, rank))
             waves: List[List[Tuple[int, ...]]] = [
                 leaf_list[i : i + wave_size] for i in range(0, leaves, wave_size)
             ]
-            events = [{"wave": i, "size": len(w)} for i, w in enumerate(waves)]
-
-            def now() -> float:
-                return time.perf_counter() - t_start
+            # Per-wave phase spans, recorded on dedicated tracks so the
+            # exported trace shows the pipeline's overlap as concurrent
+            # lanes: wave k+1's "wave.stage" sits strictly inside wave k's
+            # "wave.compute" (dispatch issue -> D2H fence) when prefetch is
+            # on. OotStats.wave_events is derived from these spans after
+            # the loop — the spans ARE the record, nothing is hand-stamped.
+            wave_spans: Dict[int, Dict[str, obs_tracer.Span]] = {}
 
             def stage(w_idx: int):
-                event = events[w_idx]
-                event["issue_start"] = now()
+                wsp = tr.begin(
+                    "wave.stage", cat="oot", track="oot.stage",
+                    wave=w_idx, size=len(waves[w_idx]),
+                )
                 staged = []
                 refs = in_flight.setdefault(w_idx, [])
                 for path in waves[w_idx]:
-                    na = self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype)
-                    nb = self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype)
-                    # Any rounding to a narrower staging dtype happens here, at
-                    # the host->device boundary — never mid-chain.
-                    a_dev = jax.device_put(na.to_dense().astype(stage_dtype, copy=False))
-                    b_dev = jax.device_put(nb.to_dense().astype(stage_dtype, copy=False))
+                    with tr.span(
+                        "leaf.stage", cat="oot", tag=tags.to_string(path),
+                        track="oot.stage", wave=w_idx, h2d_bytes=in_bytes,
+                    ):
+                        na = self._node(
+                            store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                        )
+                        nb = self._node(
+                            store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                        )
+                        # Any rounding to a narrower staging dtype happens
+                        # here, at the host->device boundary — never mid-chain.
+                        a_dev = jax.device_put(
+                            na.to_dense().astype(stage_dtype, copy=False)
+                        )
+                        b_dev = jax.device_put(
+                            nb.to_dense().astype(stage_dtype, copy=False)
+                        )
                     refs.extend((a_dev, b_dev))
                     staged.append((path, a_dev, b_dev))
                     stats.h2d_bytes += in_bytes
-                event["issue_end"] = now()
-                stats.stage_s += event["issue_end"] - event["issue_start"]
+                tr.end(wsp)
+                wave_spans.setdefault(w_idx, {})["stage"] = wsp
+                mx.counter("oot.h2d_bytes").inc(len(waves[w_idx]) * in_bytes)
+                mx.histogram("oot.wave_stage_s").record(wsp.duration)
                 return staged
 
             def dispatch(w_idx: int, staged):
+                wsp = tr.begin(
+                    "wave.dispatch", cat="oot", track="oot.dispatch", wave=w_idx
+                )
                 refs = in_flight[w_idx]
                 outs = []
                 for path, a_dev, b_dev in staged:
-                    out = self._leaf_matmul(a_dev, b_dev)
+                    with tr.span(
+                        "leaf.mul", cat="oot", tag=tags.to_string(path),
+                        track="oot.dispatch", wave=w_idx,
+                    ):
+                        out = self._leaf_matmul(a_dev, b_dev)
                     refs.append(out)
                     outs.append((path, out))
                 # Multiplies issued: drop this wave's operand refs (XLA
@@ -613,32 +736,62 @@ class StrassenScheduler:
                 # a failing leaf leaves the full ref list for the
                 # failure-path release below.
                 in_flight[w_idx] = [out for _, out in outs]
-                events[w_idx]["dispatch_end"] = now()
+                tr.end(wsp)
+                wave_spans.setdefault(w_idx, {})["dispatch"] = wsp
                 return outs
 
             def drain(w_idx: int, outs):
-                event = events[w_idx]
-                event["fetch_start"] = now()
+                wsp = tr.begin(
+                    "wave.fetch", cat="oot", track="oot.fetch", wave=w_idx
+                )
+                wave_d2h = 0
                 for path, out in outs:
-                    out = jax.block_until_ready(out)  # the pipeline's only fence
-                    host = np.asarray(out)
-                    stats.d2h_bytes += host.nbytes
-                    host = host.astype(acc_dtype, copy=False)
-                    cn = self._node(store, "C", path, (pm, pn), (bam, bbn), acc_dtype)
-                    for i in range(cn.grid[0]):
-                        for j in range(cn.grid[1]):
-                            cn.put_block(
-                                i, j,
-                                host[i * bam : (i + 1) * bam, j * bbn : (j + 1) * bbn],
-                            )
-                    self._node(store, "A", path, (pm, pk), (bam, bak), acc_dtype).free()
-                    self._node(store, "B", path, (pk, pn), (bak, bbn), acc_dtype).free()
+                    with tr.span(
+                        "leaf.fetch", cat="oot", tag=tags.to_string(path),
+                        track="oot.fetch", wave=w_idx,
+                    ) as lsp:
+                        out = jax.block_until_ready(out)  # the only fence
+                        host = np.asarray(out)
+                        stats.d2h_bytes += host.nbytes
+                        wave_d2h += host.nbytes
+                        lsp.set(d2h_bytes=host.nbytes)
+                        host = host.astype(acc_dtype, copy=False)
+                        cn = self._node(
+                            store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                        )
+                        for i in range(cn.grid[0]):
+                            for j in range(cn.grid[1]):
+                                cn.put_block(
+                                    i, j,
+                                    host[
+                                        i * bam : (i + 1) * bam,
+                                        j * bbn : (j + 1) * bbn,
+                                    ],
+                                )
+                        self._node(
+                            store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                        ).free()
+                        self._node(
+                            store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                        ).free()
                 # Drop the wave's device references (operands were consumed
                 # by the leaf multiplies; products are now on host) so the
                 # buffers free without waiting for this host loop or GC.
                 in_flight.pop(w_idx, None)
-                event["fetch_end"] = now()
-                stats.fetch_s += event["fetch_end"] - event["fetch_start"]
+                tr.end(wsp)
+                ws = wave_spans.setdefault(w_idx, {})
+                ws["fetch"] = wsp
+                # In-flight window: multiply issue -> D2H fence completion.
+                # Parity lanes keep consecutive (genuinely overlapping)
+                # windows from sharing a track, which Chrome renders badly.
+                if "dispatch" in ws:
+                    tr.add_span(
+                        "wave.compute", ws["dispatch"].t1, wsp.t1, cat="oot",
+                        track=f"oot.compute/{w_idx % 2}", parent=leaf_span,
+                        wave=w_idx, size=len(waves[w_idx]),
+                    )
+                mx.counter("oot.d2h_bytes").inc(wave_d2h)
+                mx.histogram("oot.wave_fetch_s").record(wsp.duration)
                 stats.waves += 1
                 stats.host_store_peak_bytes = max(
                     stats.host_store_peak_bytes, store.nbytes()
@@ -681,30 +834,56 @@ class StrassenScheduler:
                 outs = None
             if pending is not None:
                 drain(*pending)
-            stats.wave_events = events
-            stats.leaf_s = time.perf_counter() - t0
+            tr.end(leaf_span)
+            stats.leaf_s = leaf_span.duration
+            # Wave telemetry is DERIVED from the recorded spans (public
+            # shape unchanged: seconds since run start). finalize_overlap()
+            # below then reads these exactly as before the span rewire.
+            stats.wave_events = [
+                {
+                    "wave": i,
+                    "size": len(waves[i]),
+                    "issue_start": ws["stage"].t0 - t_start,
+                    "issue_end": ws["stage"].t1 - t_start,
+                    "dispatch_end": ws["dispatch"].t1 - t_start,
+                    "fetch_start": ws["fetch"].t0 - t_start,
+                    "fetch_end": ws["fetch"].t1 - t_start,
+                }
+                for i, ws in sorted(wave_spans.items())
+            ]
+            stats.stage_s = sum(ws["stage"].duration for ws in wave_spans.values())
+            stats.fetch_s = sum(ws["fetch"].duration for ws in wave_spans.values())
 
             # --- combine: level-order bottom-up, freeing children as we go.
-            t0 = time.perf_counter()
+            comb_span = tr.begin("oot.combine", cat="oot")
             for level in reversed(range(depth)):
-                for path in tags.leaf_paths(level, rank):
-                    children = [
-                        self._node(
-                            store, "C", tags.child(path, p, rank), (pm, pn),
-                            (bam, bbn), acc_dtype,
-                        )
-                        for p in range(rank)
-                    ]
-                    parent = self._node(
-                        store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                with tr.span(
+                    f"combine.L{level + 1}", cat="oot",
+                    level=level + 1, nodes=rank**level,
+                ):
+                    for path in tags.leaf_paths(level, rank):
+                        with tr.span(
+                            "combine.node", cat="oot",
+                            tag=tags.to_string(path), level=level,
+                        ):
+                            children = [
+                                self._node(
+                                    store, "C", tags.child(path, p, rank),
+                                    (pm, pn), (bam, bbn), acc_dtype,
+                                )
+                                for p in range(rank)
+                            ]
+                            parent = self._node(
+                                store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                            )
+                            self._combine_parent(children, parent, acc_dtype)
+                            for child in children:
+                                child.free()
+                    stats.host_store_peak_bytes = max(
+                        stats.host_store_peak_bytes, store.nbytes()
                     )
-                    self._combine_parent(children, parent, acc_dtype)
-                    for child in children:
-                        child.free()
-                stats.host_store_peak_bytes = max(
-                    stats.host_store_peak_bytes, store.nbytes()
-                )
-            stats.combine_s = time.perf_counter() - t0
+            tr.end(comb_span)
+            stats.combine_s = comb_span.duration
 
             c_root = self._node(store, "C", (), (pm, pn), (bam, bbn), acc_dtype)
             result = c_root.to_dense()[:m, :n].astype(dtype, copy=False)
@@ -730,12 +909,22 @@ class StrassenScheduler:
             in_flight.clear()
             if not owned_store:
                 store.drop_created()
+            # Close the root span (end() pops any children the unwind left
+            # open) so the tracer's per-thread stack stays consistent for
+            # whatever the caller runs next.
+            tr.end(root_span, failed=True)
             raise
         finally:
             if owned_store:
                 store.close()
-        stats.total_s = time.perf_counter() - t_start
+        stats.total_s = tr.end(root_span).duration
         stats.finalize_overlap()
+        root_span.set(
+            overlap_efficiency=stats.overlap_efficiency,
+            peak_device_bytes=stats.peak_device_bytes,
+            h2d_bytes=stats.h2d_bytes,
+            d2h_bytes=stats.d2h_bytes,
+        )
         _record_run(stats)
         return result, stats
 

@@ -62,6 +62,8 @@ import jax.numpy as jnp
 
 from repro.core.coefficients import get_scheme
 from repro.core.strassen import divide_level, strassen_matmul
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracer as obs_tracer
 
 __all__ = [
     "Candidate",
@@ -942,6 +944,14 @@ def autotune(
     engine's counters pass their own :class:`Telemetry`.
     """
     tel = telemetry if telemetry is not None else _TELEMETRY
+    # Every resolution is a span: cache hits close immediately with
+    # cache_hit=True; fresh decisions carry the predicted cost-term
+    # breakdown (t_flop/t_elem/t_coll/t_h2d) next to any measured time —
+    # the predicted-vs-measured feed the TPU recalibration item needs.
+    tr = obs_tracer.get_tracer()
+    res_span = tr.begin(
+        "autotune.resolve", cat="autotune", site=site, m=m, k=k, n=n,
+    )
     dev = jax.devices()[0]
     if mesh is not None:
         device_count = len(mesh.devices.flatten())
@@ -985,6 +995,13 @@ def autotune(
                     predicted_s=decision.predicted_s,
                     measured_s=decision.measured_s,
                 )
+            )
+            obs_metrics.get_metrics().counter("autotune.cache_hit").inc()
+            tr.end(
+                res_span, cache_hit=True, kind=decision.kind,
+                scheme=decision.scheme, depth=decision.depth, source="cache",
+                predicted_s=decision.predicted_s,
+                measured_s=decision.measured_s,
             )
             return decision
 
@@ -1050,6 +1067,10 @@ def autotune(
         )
         cache.put(store_key, decision)
         cache.save()
+    terms = predict_cost_terms(
+        best, m, k, n, calib, device_count=device_count,
+        oot_overlap=_overlap(best),
+    )
     tel.record(
         TelemetryEvent(
             key=key,
@@ -1061,11 +1082,15 @@ def autotune(
             cache_hit=False,
             predicted_s=decision.predicted_s,
             measured_s=decision.measured_s,
-            terms=predict_cost_terms(
-                best, m, k, n, calib, device_count=device_count,
-                oot_overlap=_overlap(best),
-            ),
+            terms=terms,
         )
+    )
+    obs_metrics.get_metrics().counter("autotune.cache_miss").inc()
+    tr.end(
+        res_span, cache_hit=False, kind=decision.kind,
+        scheme=decision.scheme, depth=decision.depth, source=decision.source,
+        predicted_s=decision.predicted_s, measured_s=decision.measured_s,
+        **{f"terms.{t}": v for t, v in terms.items()},
     )
     return decision
 

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.strassen import strassen_matmul
+from repro.obs import tracer as obs_tracer
 
 __all__ = [
     "MatmulBackend",
@@ -363,6 +364,20 @@ def matmul(
     for d in lead:
         m *= d
 
+    # Disabled-tracer fast path: one attribute read + the shared no-op
+    # context manager — this entry sits on every model projection, jitted
+    # trace time included. When tracing, eager calls get true wall time;
+    # under jit the span covers trace/lowering work (attr traced=True) and
+    # the XLA-side timeline comes from the jax.profiler passthrough.
+    with obs_tracer.get_tracer().span(
+        "backend.matmul", cat="matmul", m=m, k=k, n=n,
+        kind=backend.kind, site=site,
+        traced=isinstance(x, jax.core.Tracer),
+    ):
+        return _matmul_routed(x, w, backend, w_logical, site, lead, m, k, n)
+
+
+def _matmul_routed(x, w, backend, w_logical, site, lead, m, k, n):
     if backend.kind == "auto":
         if backend.device_budget is not None and (
             isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer)

@@ -48,10 +48,16 @@ def main():
                     help="verify against the dense jnp.matmul")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None, help="write stats JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run here")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.blocks.scheduler import min_depth_for_budget, strassen_oot_matmul
     from repro.core.backend import MatmulBackend
+
+    if args.trace_out:
+        obs.configure(enabled=True)
 
     m = args.m or args.n
     k = args.k or args.n
@@ -122,6 +128,12 @@ def main():
         with open(args.json_out, "w") as f:
             json.dump(stats.to_dict(), f, indent=1)
         print(f"wrote {args.json_out}")
+
+    if args.trace_out:
+        from repro.obs import export
+
+        export.write_trace(args.trace_out, metrics=obs.get_metrics())
+        print(f"wrote {args.trace_out} ({len(obs.get_tracer().spans)} spans)")
 
 
 if __name__ == "__main__":

@@ -25,12 +25,12 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
 import jax
 
+from repro import obs
 from repro.configs import ARCH_IDS, SHAPES, get_config, skip_reason
 from repro.core.backend import JIT_SAFE_KINDS, MatmulBackend
 from repro.launch.hlo_analysis import analyze_hlo
@@ -196,11 +196,16 @@ def run_cell(
     if reason:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "skipped": reason}
 
-    t0 = time.time()
+    tr = obs.get_tracer()
+    span = tr.begin(
+        "dryrun.compile", cat="launch",
+        arch=arch, shape=shape_name, mesh=mesh_kind,
+    )
     lowered, compiled, meta = lower_cell(
         arch, shape_name, mesh_kind, backend=backend, rules=rules, accum=accum
     )
-    t_compile = time.time() - t0
+    tr.end(span)
+    t_compile = span.duration
 
     # Execution-weighted static analysis (XLA's cost_analysis does NOT
     # multiply while-loop bodies by trip count — see launch/hlo_analysis).
@@ -278,7 +283,13 @@ def main():
     ap.add_argument("--accum", type=int, default=TRAIN_ACCUM)
     ap.add_argument("--tag", default="")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument(
+        "--trace-out", default="",
+        help="enable obs tracing and write a Chrome/Perfetto trace here",
+    )
     args = ap.parse_args()
+    if args.trace_out:
+        obs.configure(enabled=True)
 
     backend = None
     if args.backend and args.backend != "naive":
@@ -336,6 +347,11 @@ def main():
                 failures.append((arch, shape, mesh_kind, repr(e)))
                 print(f"  FAILED: {e}")
                 traceback.print_exc()
+    if args.trace_out:
+        from repro.obs import export
+
+        export.write_trace(args.trace_out, metrics=obs.get_metrics())
+        print(f"trace -> {args.trace_out}")
     if failures:
         print(f"\n{len(failures)} FAILURES:")
         for f in failures:

@@ -16,12 +16,12 @@ Usage:
 import argparse
 import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.distributed import strassen_2d, strassen_bfs_sharded
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh
@@ -126,9 +126,12 @@ def run_cell(n: int, strategy: str, mesh_kind: str, dtype=jnp.bfloat16):
         shard = NamedSharding(grid, P())
     else:
         shard = NamedSharding(mesh, P(("data",), None))
-    t0 = time.time()
+    span = obs.get_tracer().begin(
+        "matmul_cell.compile", cat="launch", n=n, strategy=strategy, mesh=mesh_kind
+    )
     jitted = jax.jit(fn, in_shardings=(shard, shard))
     compiled = jitted.lower(spec, spec).compile()
+    obs.get_tracer().end(span)
     costs = analyze_hlo(compiled.as_text())
     terms = roofline_terms(
         hlo_flops=costs.dot_flops,
@@ -145,7 +148,7 @@ def run_cell(n: int, strategy: str, mesh_kind: str, dtype=jnp.bfloat16):
         "strategy": strategy,
         "mesh": mesh_kind,
         "chips": chips,
-        "compile_seconds": round(time.time() - t0, 1),
+        "compile_seconds": round(span.duration, 1),
         "roofline": terms,
         "flops_per_device": costs.dot_flops,
         "useful_fraction": ideal / costs.dot_flops if costs.dot_flops else None,

@@ -66,7 +66,13 @@ def main():
     )
     ap.add_argument("--strassen-depth", type=int, default=1)
     ap.add_argument("--strassen-min-dim", type=int, default=1024)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run here")
     args = ap.parse_args()
+    if args.trace_out:
+        from repro import obs
+
+        obs.configure(enabled=True)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.backend:
@@ -128,6 +134,7 @@ def main():
                 f"arch={cfg.name} generated {tokens.shape} in {dt:.2f}s "
                 f"({n/dt:.1f} tok/s incl. compile); stats={stats}"
             )
+            _write_trace(args.trace_out, engine)
             return
         # request API: submit the batch as independent requests (staggered
         # lengths) and let the scheduler pack the decode bucket
@@ -152,6 +159,20 @@ def main():
             f"in {dt:.2f}s ({n/dt:.1f} tok/s incl. compile)"
         )
         print(f"serve_stats: {engine.serve_stats()}")
+        _write_trace(args.trace_out, engine)
+
+
+def _write_trace(path, engine):
+    if not path:
+        return
+    from repro.obs import export
+
+    export.write_trace(path, metrics=engine.metrics)
+    obs = engine.stats()["obs"]
+    print(
+        f"wrote {path} ({obs['tracer']['spans']} spans, "
+        f"{len(obs['metrics'])} metric series)"
+    )
 
 
 import contextlib

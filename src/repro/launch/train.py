@@ -20,6 +20,7 @@ import time
 
 import jax
 
+from repro import obs
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.backend import MatmulBackend
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_for_host
@@ -210,7 +211,11 @@ def main():
     ap.add_argument("--summary-out", default=None,
                     help="write a run-summary JSON (loss, step time, "
                     "backend, autotune telemetry) here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the run here")
     args = ap.parse_args()
+    if args.trace_out:
+        obs.configure(enabled=True)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     baseline_cfg = cfg  # the hand-picked backend, for --compare-steps
@@ -279,6 +284,11 @@ def main():
         with open(args.summary_out, "w") as f:
             json.dump(summary, f, indent=1)
         print(f"wrote {args.summary_out}")
+    if args.trace_out:
+        from repro.obs import export
+
+        export.write_trace(args.trace_out, metrics=obs.get_metrics())
+        print(f"wrote {args.trace_out}")
 
 
 if __name__ == "__main__":

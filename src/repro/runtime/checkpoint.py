@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import tracer as obs_tracer
+
 __all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
 
 _MANIFEST = "manifest.json"
@@ -40,6 +42,9 @@ def save_pytree(tree, directory: str, *, step: int, extra: Optional[Dict] = None
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    span = obs_tracer.get_tracer().begin(
+        "ckpt.save", cat="runtime", track="runtime", step=step
+    )
     try:
         arrays = {}
         for key, leaf in _flatten_with_paths(tree):
@@ -62,27 +67,36 @@ def save_pytree(tree, directory: str, *, step: int, extra: Optional[Dict] = None
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
+        obs_tracer.get_tracer().end(
+            span, n_arrays=len(arrays), bytes=sum(a.nbytes for a in arrays.values())
+        )
         return final
     except BaseException:
+        obs_tracer.get_tracer().end(span, failed=True)
         shutil.rmtree(tmp, ignore_errors=True)
         raise
 
 
 def load_pytree(template, path: str):
     """Load arrays into the structure of ``template`` (shapes must match)."""
-    data = np.load(os.path.join(path, _ARRAYS))
-    by_key = {}
-    for key in data.files:
-        if key.endswith("::bf16"):
-            by_key[key[: -len("::bf16")]] = data[key].view(jnp.bfloat16)
-        else:
-            by_key[key] = data[key]
-    leaves = []
-    for key, leaf in _flatten_with_paths(template):
-        arr = by_key[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        leaves.append(jnp.asarray(arr))
-    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+    with obs_tracer.get_tracer().span(
+        "ckpt.load", cat="runtime", track="runtime", path=os.path.basename(path)
+    ):
+        data = np.load(os.path.join(path, _ARRAYS))
+        by_key = {}
+        for key in data.files:
+            if key.endswith("::bf16"):
+                by_key[key[: -len("::bf16")]] = data[key].view(jnp.bfloat16)
+            else:
+                by_key[key] = data[key]
+        leaves = []
+        for key, leaf in _flatten_with_paths(template):
+            arr = by_key[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves
+        )
 
 
 @dataclasses.dataclass

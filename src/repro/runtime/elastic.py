@@ -22,9 +22,10 @@ the recovery unit is the whole job, and the mechanism is:
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Deque, Optional, Tuple
+
+from repro.obs import tracer as obs_tracer
 
 __all__ = ["plan_mesh", "rebalance_accum", "StragglerMonitor", "ElasticError"]
 
@@ -78,16 +79,23 @@ class StragglerMonitor:
     def __post_init__(self):
         self._times: Deque[float] = deque(maxlen=self.window)
         self._slow_streak = 0
-        self._last: Optional[float] = None
+        self._span: Optional[obs_tracer.Span] = None
+        self._step_idx = 0
 
     def start_step(self):
-        self._last = time.perf_counter()
+        # begin() hands back a timed Span even when tracing is disabled, so
+        # the watchdog math below is independent of the tracer's enabled bit.
+        self._span = obs_tracer.get_tracer().begin(
+            "train.step", cat="train", track="train", step=self._step_idx
+        )
 
     def end_step(self) -> bool:
         """Record one step; True -> checkpoint + restart recommended."""
-        assert self._last is not None, "end_step without start_step"
-        dt = time.perf_counter() - self._last
-        self._last = None
+        assert self._span is not None, "end_step without start_step"
+        obs_tracer.get_tracer().end(self._span)
+        dt = self._span.duration
+        self._span = None
+        self._step_idx += 1
         median = sorted(self._times)[len(self._times) // 2] if self._times else dt
         self._times.append(dt)
         if len(self._times) >= self.window // 2 and dt > self.threshold * median:

@@ -38,6 +38,8 @@ import numpy as np
 
 from repro.core import autotune
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracer as obs_tracer
 from repro.models.config import ModelConfig
 from repro.models.frontends import make_stub_positions
 from repro.serving.kv_pool import CacheLayout, PagePool
@@ -149,13 +151,19 @@ class Engine:
         # so each engine zeroes it up front: autotune_stats()/generate()
         # then report this engine's resolutions, not a previous instance's
         # — two engines used to interleave counters and decision records.
-        # The out-of-core run ring is process-global for the same reason
-        # and gets the same treatment, keeping autotune_stats()["oot"]
-        # scoped to runs since this engine was built.
         autotune.reset_telemetry()
-        from repro.blocks.scheduler import reset_oot_stats
+        # Out-of-core run stats, by contrast, are consumed through an
+        # engine-OWNED ring: every run since this engine was built lands
+        # here regardless of how many other engines run concurrently —
+        # resetting the process-global ring (the previous fix) still
+        # clobbered a concurrently-running second engine's view.
+        from repro.blocks.scheduler import attach_stats_ring
 
-        reset_oot_stats()
+        self._oot_ring = attach_stats_ring()
+        # Per-engine obs registry: request-latency histograms (TTFT /
+        # TPOT), pool-page gauges, token counters. Engine-scoped for the
+        # same isolation reason as the ring; surfaced by stats()["obs"].
+        self.metrics = obs_metrics.Metrics()
         # Apply process-level backend knobs (XLA latency-hiding flags)
         # once per run, here rather than per call site.
         cfg.matmul_backend.configure()
@@ -393,6 +401,10 @@ class Engine:
         self._next_id += 1
         self._requests[req.id] = req
         self._stats.submitted += 1
+        obs_tracer.get_tracer().event(
+            "request.submit", tag=f"req{req.id}", track=f"serve.req/{req.id}",
+            prompt_len=req.prompt_len, max_new=req.max_new_tokens,
+        )
         handle = RequestHandle(self, req)
 
         if self.serve.admission == "reject":
@@ -504,7 +516,11 @@ class Engine:
             self._admit(req, need)
 
     def _admit(self, req: Request, need: int) -> None:
-        t0 = time.perf_counter()
+        span = obs_tracer.get_tracer().begin(
+            "engine.prefill", cat="serve", track="serve.engine",
+            request=req.id, prompt_len=req.prompt_len, pages=need,
+        )
+        t0 = span.t0
         serve = self.serve
         req.state = RequestState.PREFILL
         req.t_admit = t0
@@ -554,7 +570,13 @@ class Engine:
         # the prefill-sampled token is emission #1 for this request
         self._buffer.append(_Buffered(tok, ((req.slot, req),), prefill=True))
         req._emitted_est = 1  # type: ignore[attr-defined]
-        self._stats.prefill_s += time.perf_counter() - t0
+        obs_tracer.get_tracer().end(span)
+        self._stats.prefill_s += span.duration
+        # Decode phase starts here; _finish uses this to split the
+        # request's lifecycle spans.
+        req._t_decode = span.t1  # type: ignore[attr-defined]
+        self.metrics.histogram("serve.prefill_s").record(span.duration)
+        self.metrics.gauge("serve.pages_in_use").set(self._pool.in_use)
 
     def _host_live(self) -> List[Tuple[int, Request]]:
         return [
@@ -583,7 +605,10 @@ class Engine:
         live = self._host_live()
         if not live:
             return False
-        t0 = time.perf_counter()
+        span = obs_tracer.get_tracer().begin(
+            "engine.decode_step", cat="serve", track="serve.engine",
+            live=len(live),
+        )
         mask = np.zeros((self.serve.slots,), bool)
         for slot, _ in live:
             mask[slot] = True
@@ -602,7 +627,8 @@ class Engine:
         self._steps_since_sync += 1
         self._stats.decode_steps += 1
         self._stats.buckets[bucket] = self._stats.buckets.get(bucket, 0) + 1
-        self._stats.decode_dispatch_s += time.perf_counter() - t0
+        obs_tracer.get_tracer().end(span, bucket_pages=bucket)
+        self._stats.decode_dispatch_s += span.duration
         return True
 
     def _drain_due(self) -> bool:
@@ -621,7 +647,12 @@ class Engine:
         fire streaming callbacks, and retire finished requests."""
         if not self._buffer:
             return []
-        t0 = time.perf_counter()
+        # The sync_interval host<->device boundary: the one place decode
+        # tokens materialize on host, so its span IS the sync cadence.
+        span = obs_tracer.get_tracer().begin(
+            "engine.sync", cat="serve", track="serve.engine",
+            buffered=len(self._buffer),
+        )
         buffered, self._buffer = self._buffer, []
         arrays = jax.device_get([b.arr for b in buffered])
         now = time.perf_counter()
@@ -650,7 +681,9 @@ class Engine:
         self._stats.syncs += 1
         for req, ev in callbacks:
             req.on_token(RequestHandle(self, req), ev)
-        self._stats.drain_s += time.perf_counter() - t0
+        obs_tracer.get_tracer().end(span, tokens=len(events))
+        self._stats.drain_s += span.duration
+        self.metrics.counter("serve.tokens_emitted").inc(len(events))
         return events
 
     def _finish(self, req: Request, reason: str) -> None:
@@ -669,6 +702,53 @@ class Engine:
             self._active.pop(req.slot, None)
             self._free_slots.append(req.slot)
             req.slot = None
+        self._record_request_obs(req)
+
+    def _record_request_obs(self, req: Request) -> None:
+        """Lifecycle spans (queued -> prefill -> decoding, one lane per
+        request) + the TTFT/TPOT histograms. TTFT and the per-request
+        mean inter-token gap are computed exactly as
+        ``RequestHandle.latency_stats()`` consumers do, so histogram
+        percentiles reconcile with the per-request records to float
+        precision (the serve_load smoke gate)."""
+        tr = obs_tracer.get_tracer()
+        if tr.enabled:
+            lane = f"serve.req/{req.id}"
+            tag = f"req{req.id}"
+            end = req.t_finish if req.t_finish is not None else req.t_submit
+            if req.t_admit is not None:
+                tr.add_span(
+                    "request.queued", req.t_submit, req.t_admit,
+                    cat="serve", tag=tag, track=lane,
+                )
+                t_decode = getattr(req, "_t_decode", req.t_admit)
+                tr.add_span(
+                    "request.prefill", req.t_admit, t_decode,
+                    cat="serve", tag=tag, track=lane,
+                )
+                tr.add_span(
+                    "request.decoding", t_decode, end,
+                    cat="serve", tag=tag, track=lane,
+                    tokens=len(req.tokens), finish=req.finish_reason,
+                )
+            else:  # never admitted (rejected / evicted from queue)
+                tr.add_span(
+                    "request.queued", req.t_submit, end,
+                    cat="serve", tag=tag, track=lane, finish=req.finish_reason,
+                )
+        if self._pool is not None:
+            self.metrics.gauge("serve.pages_in_use").set(self._pool.in_use)
+        self.metrics.counter(f"serve.requests_{req.finish_reason}").inc()
+        if req.t_first_token is not None:
+            self.metrics.histogram("serve.ttft_s").record(
+                req.t_first_token - req.t_submit
+            )
+        gaps = [
+            req.token_times[i] - req.token_times[i - 1]
+            for i in range(1, len(req.token_times))
+        ]
+        if gaps:
+            self.metrics.histogram("serve.tpot_s").record(float(np.mean(gaps)))
 
     # ------------------------------------------------------- generate API
 
@@ -863,10 +943,28 @@ class Engine:
         bytes, overlap telemetry) for any ``strassen_oot`` resolutions
         this process executed since the engine was built.
         """
-        from repro.blocks.scheduler import recent_oot_stats
-
         return {
             **autotune.get_telemetry().snapshot(),
             "calibration": autotune.calibration_snapshot(),
-            "oot": recent_oot_stats(),
+            "oot": self._oot_ring.snapshot(),
+        }
+
+    def stats(self) -> Dict[str, Any]:
+        """One roll-up of every telemetry surface this engine owns:
+        ``serve`` (scheduler/pool counters), ``autotune`` (decision log +
+        calibration + out-of-core runs), and ``obs`` — the engine's
+        metrics registry snapshot (TTFT/TPOT histograms, pages-in-use
+        gauge, token counters) plus the process tracer's state."""
+        tracer = obs_tracer.get_tracer()
+        return {
+            "serve": self.serve_stats(),
+            "autotune": self.autotune_stats(),
+            "obs": {
+                "metrics": self.metrics.snapshot(),
+                "tracer": {
+                    "enabled": tracer.enabled,
+                    "spans": len(tracer.spans),
+                    "dropped": tracer.dropped,
+                },
+            },
         }

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.models.sharding import constrain
+from repro.obs import tracer as obs_tracer
 from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
 
 __all__ = ["TrainState", "init_train_state", "make_train_step"]
@@ -62,6 +63,15 @@ def make_train_step(
     grad_fn = jax.value_and_grad(loss_of, has_aux=True)
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        # The step is jitted, so this span fires once per compile (trace
+        # time), not per executed step — per-step wall clock lives in
+        # StragglerMonitor's train.step spans.
+        with obs_tracer.get_tracer().span(
+            "train.step.trace", cat="train", track="train", accum=accum_steps
+        ):
+            return _train_step_body(state, batch)
+
+    def _train_step_body(state: TrainState, batch: Dict[str, jax.Array]):
         if accum_steps == 1:
             (loss, metrics), grads = grad_fn(state.params, batch)
         else:
