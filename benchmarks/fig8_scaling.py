@@ -71,6 +71,8 @@ def sweep(
     depth=0,
     parity_max=4096,
     compare_sync=False,
+    fault_rate=0.0,
+    chaos_seed=0,
     out_path="fig8_scaling.json",
 ):
     """Run the wall-clock-vs-size table; returns the JSON payload.
@@ -80,10 +82,19 @@ def sweep(
     there, never in the reported sample. ``compare_sync`` additionally
     times the synchronous (``prefetch=False``) loop per size so the row
     carries ``sync_s`` and ``overlap_speedup``.
+
+    ``fault_rate`` > 0 adds an (untimed) chaos run per size: blocks are
+    dropped/corrupted and leaf multiplies fail at seeded rates while
+    lineage recovery heals the store. The row's ``chaos`` record carries
+    the injection/recovery counters and a ``bit_exact`` flag comparing
+    the chaos run's result against the fault-free timed run — recovery
+    replays the exact computation path, so anything short of
+    bit-identical is a failure.
     """
     import numpy as np
 
     from benchmarks.common import emit
+    from repro.blocks.recovery import ChaosConfig
     from repro.blocks.scheduler import min_depth_for_budget, strassen_oot_matmul
     from repro.core.backend import MatmulBackend
 
@@ -147,7 +158,37 @@ def sweep(
             "dense_s": None,
             "rel_err": None,
             "ok": None,
+            "chaos": None,
         }
+        if fault_rate > 0:
+            chaos = ChaosConfig(
+                drop=fault_rate,
+                corrupt=fault_rate * 0.4,
+                leaf_fail_rate=fault_rate * 0.5,
+                seed=chaos_seed,
+            )
+            out_chaos, stats_chaos = strassen_oot_matmul(a, b, chaos=chaos, **kwargs)
+            row["chaos"] = {
+                "drop": chaos.drop,
+                "corrupt": chaos.corrupt,
+                "leaf_fail_rate": chaos.leaf_fail_rate,
+                "seed": chaos.seed,
+                "injected_faults": stats_chaos.injected_faults,
+                "lost_blocks": stats_chaos.lost_blocks,
+                "corrupt_blocks": stats_chaos.corrupt_blocks,
+                "recovered_blocks": stats_chaos.recovered_blocks,
+                "leaf_retries": stats_chaos.leaf_retries,
+                "unrecovered_faults": stats_chaos.unrecovered_faults,
+                "rung": stats_chaos.rung,
+                "degrades": stats_chaos.degrades,
+                "peak_device_bytes": stats_chaos.peak_device_bytes,
+                "bit_exact": bool(
+                    np.array_equal(
+                        np.asarray(out, np.float32),
+                        np.asarray(out_chaos, np.float32),
+                    )
+                ),
+            }
         if compare_sync:
             out_sync, stats_sync = min(
                 (
@@ -186,6 +227,8 @@ def sweep(
         "dtype": np_dtype.name,
         "store": store,
         "tolerance": tol,
+        "fault_rate": fault_rate,
+        "chaos_seed": chaos_seed,
         "rows": rows,
     }
     with open(out_path, "w") as f:
@@ -221,6 +264,12 @@ def main():
                     help="CI mode: tiny bf16 sizes under a budget that "
                          "forces >= 2 staging waves; non-zero exit on "
                          "parity drift > 1e-2 or a degenerate plan")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: per-get drop probability (corruption "
+                         "and leaf-failure rates derive from it); adds a "
+                         "recovery run per size gated bit-exact against "
+                         "the fault-free run")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--out", default="fig8_scaling.json")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome/Perfetto trace of the sweep here")
@@ -235,6 +284,7 @@ def main():
         payload = sweep(
             SMOKE_SIZES, budget_bytes=SMOKE_BUDGET, dtype="bfloat16",
             store=args.store, parity_max=max(SMOKE_SIZES), compare_sync=True,
+            fault_rate=args.fault_rate, chaos_seed=args.chaos_seed,
             out_path=args.out,
         )
     else:
@@ -242,6 +292,7 @@ def main():
             tuple(int(s) for s in args.sizes.split(",")),
             budget_bytes=int(args.budget_mb * 2**20), dtype=args.dtype,
             store=args.store, depth=args.depth, parity_max=args.parity_max,
+            fault_rate=args.fault_rate, chaos_seed=args.chaos_seed,
             out_path=args.out,
         )
 
@@ -308,6 +359,42 @@ def main():
         print(f"# smoke ok: n={top['n']} ran {top['waves']} waves under a "
               f"{payload['budget_bytes']} B budget (operand {top['operand_bytes']} B); "
               f"pipelined-vs-sync speedup [{speedups}]")
+
+    if args.fault_rate > 0:
+        # Chaos gates (independent of --smoke): every chaos run must heal
+        # to a bit-identical result with zero unrecovered faults, under
+        # budget, and the harness must actually have exercised recovery —
+        # recompute AND retry counters > 0 across the sweep.
+        chaos_rows = [r for r in payload["rows"] if r["chaos"] is not None]
+        inexact = [r["n"] for r in chaos_rows if not r["chaos"]["bit_exact"]]
+        if inexact:
+            print(f"# CHAOS FAIL: recovered result not bit-identical: {inexact}")
+            sys.exit(1)
+        unrec = [
+            (r["n"], r["chaos"]["unrecovered_faults"])
+            for r in chaos_rows if r["chaos"]["unrecovered_faults"]
+        ]
+        if unrec:
+            print(f"# CHAOS FAIL: unrecovered faults: {unrec}")
+            sys.exit(1)
+        recovered = sum(r["chaos"]["recovered_blocks"] for r in chaos_rows)
+        retries = sum(r["chaos"]["leaf_retries"] for r in chaos_rows)
+        if not recovered or not retries:
+            print(f"# CHAOS FAIL: harness under-exercised "
+                  f"(recovered={recovered}, retries={retries})")
+            sys.exit(1)
+        over = [
+            r["n"] for r in chaos_rows
+            if r["chaos"]["peak_device_bytes"] > r["budget_bytes"]
+        ]
+        if over:
+            print(f"# CHAOS FAIL: chaos run exceeded the device budget: {over}")
+            sys.exit(1)
+        injected = sum(r["chaos"]["injected_faults"] for r in chaos_rows)
+        print(f"# chaos ok: {injected} faults injected across "
+              f"{len(chaos_rows)} sizes; {recovered} blocks recomputed from "
+              f"lineage, {retries} leaf retries, 0 unrecovered, all results "
+              f"bit-identical to the fault-free runs")
 
 
 if __name__ == "__main__":

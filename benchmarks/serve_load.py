@@ -75,16 +75,25 @@ def _workload(n_requests: int, vocab: int, seed: int):
     return reqs
 
 
-def _drive(engine, reqs: List[dict]) -> Dict[str, float]:
+def _drive(engine, reqs: List[dict], poison: Dict[int, int] = {}) -> Dict[str, float]:
     """Open loop: submit each request at its arrival timestamp (never
-    waiting for the engine), step the scheduler in between."""
+    waiting for the engine), step the scheduler in between.
+
+    ``poison`` maps request index -> token count at which that request's
+    decode dispatch raises an injected fault (the engine's per-request
+    isolation must evict it and keep the survivors intact)."""
     t0 = time.perf_counter()
     handles = []
     i = 0
     while i < len(reqs) or not all(h.done for h in handles):
         now = time.perf_counter() - t0
         while i < len(reqs) and reqs[i]["at"] <= now:
-            handles.append(engine.submit(reqs[i]["prompt"], reqs[i]["max_new"]))
+            handles.append(
+                engine.submit(
+                    reqs[i]["prompt"], reqs[i]["max_new"],
+                    _inject_fault_at=poison.get(i),
+                )
+            )
             i += 1
         if handles and not all(h.done for h in handles):
             engine.step()
@@ -93,6 +102,14 @@ def _drive(engine, reqs: List[dict]) -> Dict[str, float]:
     makespan = time.perf_counter() - t0
 
     total_tokens = sum(len(h.tokens()) for h in handles)
+    finished = [h for h in handles if h.finish_reason in ("eos", "length")]
+    evicted = [h for h in handles if h.state.value == "evicted"]
+    goodput_tokens = sum(len(h.tokens()) for h in finished)
+    clean_unfinished = sum(
+        1
+        for idx, h in enumerate(handles)
+        if idx not in poison and h.finish_reason not in ("eos", "length")
+    )
     ttfts, tpots = [], []
     for h in handles:
         ttft, gaps = h.latency_stats()
@@ -109,6 +126,12 @@ def _drive(engine, reqs: List[dict]) -> Dict[str, float]:
         "total_tokens": total_tokens,
         "makespan_s": makespan,
         "tokens_per_s": total_tokens / makespan if makespan else 0.0,
+        # goodput counts only completed (eos/length) requests' tokens —
+        # work delivered to callers, not work evicted mid-flight
+        "finished_requests": len(finished),
+        "evicted_requests": len(evicted),
+        "goodput_tokens_per_s": goodput_tokens / makespan if makespan else 0.0,
+        "clean_unfinished": clean_unfinished,
         "ttft_p50_s": pct(ttfts, 50),
         "ttft_p99_s": pct(ttfts, 99),
         "tpot_p50_s": pct(tpots, 50),
@@ -136,6 +159,8 @@ def run(
     slots: int = 3,
     seed: int = 0,
     smoke: bool = False,
+    fault_rate: float = 0.0,
+    chaos_seed: int = 0,
     out: str = "",
     trace_out: str = "",
 ) -> int:
@@ -143,6 +168,15 @@ def run(
         from repro import obs
 
         obs.configure(enabled=True)
+    # Fault mode: poison a deterministic subset of the continuous run's
+    # requests (injected decode failure after 2 tokens). rate * n rounds
+    # to ~0 at smoke scale, so at least one request is always poisoned.
+    poison: Dict[int, int] = {}
+    if fault_rate > 0:
+        rng = np.random.default_rng(chaos_seed)
+        n_poison = max(1, round(fault_rate * n_requests))
+        chosen = rng.choice(n_requests, size=n_poison, replace=False)
+        poison = {int(i): 2 for i in chosen}
     # decode_pages pinned: both modes run the same fixed decode bucket,
     # so per-step cost is identical and the measured difference is purely
     # the scheduling policy (packing, not kernel shape).
@@ -157,7 +191,10 @@ def run(
         reqs = _workload(n_requests, cfg.vocab, seed)
         _drive(engine, reqs)  # warmup: absorb jit traces for this engine
         engine.metrics.reset()  # drop the warmup's TTFT/TPOT samples
-        stats = _drive(engine, reqs)
+        # faults are injected into the continuous engine's timed run only
+        # (the static gang is the clean baseline; the warmup stays clean
+        # so fault counters reflect the measured run alone)
+        stats = _drive(engine, reqs, poison if mode == "continuous" else {})
         stats["serve"] = engine.serve_stats()
         # The same latencies, read back from the engine's obs histograms —
         # the smoke gate below holds them to the per-request values.
@@ -172,6 +209,8 @@ def run(
             f"serve_load/{mode}",
             stats["makespan_s"],
             f"tok_per_s={stats['tokens_per_s']:.1f};"
+            f"goodput={stats['goodput_tokens_per_s']:.1f};"
+            f"evicted={stats['evicted_requests']};"
             f"tpot_p50={stats['tpot_p50_s'] * 1e3:.1f}ms;"
             f"tpot_p99={stats['tpot_p99_s'] * 1e3:.1f}ms",
         )
@@ -191,6 +230,9 @@ def run(
         "model": model,
         "n_requests": n_requests,
         "serve": serve_base,
+        "fault_rate": fault_rate,
+        "chaos_seed": chaos_seed,
+        "poisoned_requests": sorted(poison),
         "modes": results,
         "continuous_vs_static": speedup,
         "generate_shim_parity": parity_ok,
@@ -208,11 +250,32 @@ def run(
         failures = []
         if not parity_ok:
             failures.append("generate() shim diverged from the legacy static loop")
-        if cont["tokens_per_s"] < stat["tokens_per_s"]:
+        if not poison and cont["tokens_per_s"] < stat["tokens_per_s"]:
+            # fault mode evicts continuous-run requests mid-decode, so the
+            # raw-throughput comparison against the clean static gang is
+            # meaningless there — the fault gates below replace it
             failures.append(
                 f"continuous {cont['tokens_per_s']:.1f} tok/s < "
                 f"static {stat['tokens_per_s']:.1f} tok/s"
             )
+        if poison:
+            counters = cont["obs"].get("counters", {})
+            if cont["evicted_requests"] != len(poison):
+                failures.append(
+                    f"poisoned {len(poison)} requests but "
+                    f"{cont['evicted_requests']} were evicted"
+                )
+            if cont["clean_unfinished"]:
+                failures.append(
+                    f"{cont['clean_unfinished']} non-poisoned requests "
+                    "failed to finish — fault isolation leaked"
+                )
+            if not cont["goodput_tokens_per_s"] > 0:
+                failures.append("zero goodput under fault injection")
+            if not counters.get("fault.injected_faults"):
+                failures.append("fault.injected_faults counter never fired")
+            if not counters.get("fault.evicted_requests"):
+                failures.append("fault.evicted_requests counter never fired")
         for mode, st in results.items():
             if not (st["tpot_p50_s"] > 0 and st["tpot_p99_s"] >= st["tpot_p50_s"]):
                 failures.append(f"{mode}: degenerate latency percentiles")
@@ -240,6 +303,11 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="small run + gates")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="poison ~rate*requests of the continuous run with "
+                    "injected decode faults; reports goodput + evictions "
+                    "and gates per-request isolation under --smoke")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--out", default="", help="write full JSON report here")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome/Perfetto trace of the load run here")
@@ -251,6 +319,8 @@ def main() -> None:
             slots=args.slots,
             seed=args.seed,
             smoke=args.smoke,
+            fault_rate=args.fault_rate,
+            chaos_seed=args.chaos_seed,
             out=args.out,
             trace_out=args.trace_out,
         )

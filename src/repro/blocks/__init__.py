@@ -11,6 +11,10 @@ scarce resource:
                  store (dict, preallocated RAM arena, npy/memmap spill).
   scheduler    — a level-order Strassen executor that stages the 7^q leaf
                  multiplies through device memory in budgeted waves.
+  recovery     — lineage-based fault tolerance: the tag algebra IS the
+                 lineage graph, so any lost/corrupt block recomputes from
+                 its parents (RecoveringStore), with a deterministic
+                 chaos-injection harness (ChaosStore / FlakyLeaf).
 
 Where Stark bounds per-executor memory by partitioning the RDD, this
 subsystem bounds peak *device* memory by a configurable byte budget while
@@ -24,6 +28,18 @@ from repro.blocks.blockmatrix import (
     DictStore,
     MemmapStore,
     make_store,
+    signed_block_sum,
+)
+from repro.blocks.recovery import (
+    BlockLossError,
+    ChaosConfig,
+    ChaosStore,
+    FaultError,
+    FlakyLeaf,
+    InjectedFault,
+    Lineage,
+    RecoveringStore,
+    recompute_block,
 )
 from repro.blocks.scheduler import (
     OotStats,
@@ -42,9 +58,19 @@ __all__ = [
     "MemmapStore",
     "make_store",
     "BlockMatrix",
+    "signed_block_sum",
     "StrassenScheduler",
     "OotStats",
     "strassen_oot_matmul",
     "leaf_bytes",
     "min_depth_for_budget",
+    "FaultError",
+    "InjectedFault",
+    "BlockLossError",
+    "ChaosConfig",
+    "ChaosStore",
+    "FlakyLeaf",
+    "Lineage",
+    "RecoveringStore",
+    "recompute_block",
 ]

@@ -42,9 +42,32 @@ __all__ = [
     "MemmapStore",
     "make_store",
     "BlockMatrix",
+    "signed_block_sum",
 ]
 
 BlockKey = Tuple[int, int, str]  # (block row, block col, tag string)
+
+
+def signed_block_sum(get_block, coefs: np.ndarray, acc_dtype) -> np.ndarray:
+    """sum_i coefs[i] * get_block(i) with zero-skip and +/-1 fast paths.
+
+    The one accumulation discipline divide, combine, AND lineage
+    recompute (:mod:`repro.blocks.recovery`) share: terms are read
+    through ``.astype`` (ml_dtypes/bf16 memmaps fail numpy's direct-cast
+    buffer path) and summed in ``acc_dtype``, in ascending index order.
+    Recompute replays a block bit-for-bit only because it runs this
+    exact loop — keep any change to the ordering or fast paths here.
+    """
+    acc = None
+    for idx in range(len(coefs)):
+        c = float(coefs[idx])
+        if c == 0.0:
+            continue
+        blk = np.asarray(get_block(idx)).astype(acc_dtype, copy=False)
+        term = blk if c == 1.0 else (-blk if c == -1.0 else c * blk)
+        acc = term if acc is None else acc + term
+    assert acc is not None, "coefficient row is all zero"
+    return acc
 
 
 class BlockStore(abc.ABC):

@@ -40,13 +40,27 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import weakref
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.blocks import tags
-from repro.blocks.blockmatrix import BlockMatrix, BlockStore, make_store
+from repro.blocks.blockmatrix import (
+    BlockMatrix,
+    BlockStore,
+    make_store,
+    signed_block_sum,
+)
+from repro.blocks.recovery import (
+    ChaosConfig,
+    ChaosStore,
+    FaultError,
+    FlakyLeaf,
+    Lineage,
+    RecoveringStore,
+)
 from repro.core.coefficients import Scheme, get_scheme
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracer as obs_tracer
@@ -187,6 +201,21 @@ class OotStats:
     fetch_s: float = 0.0
     overlap_efficiency: float = 0.0
     wave_events: List[dict] = dataclasses.field(default_factory=list)
+    # Fault-tolerance telemetry (PR 9). ``rung`` is the degradation-ladder
+    # rung the run finally completed on; ``degrade_events`` records each
+    # transition. ``unrecovered_faults`` counts lineage recomputes that
+    # failed the put-time checksum replay — zero on a healthy run, chaos
+    # or not. ``injected_faults`` is cumulative across ladder rungs (the
+    # flaky-leaf shim's call counter spans attempts).
+    rung: str = "pipeline"
+    degrades: int = 0
+    degrade_events: List[dict] = dataclasses.field(default_factory=list)
+    leaf_retries: int = 0
+    recovered_blocks: int = 0
+    lost_blocks: int = 0
+    corrupt_blocks: int = 0
+    injected_faults: int = 0
+    unrecovered_faults: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -359,6 +388,25 @@ class StrassenScheduler:
         which holds deep-recursion bf16 parity to ~1e-3. Pass the compute
         dtype explicitly to halve staging volume at the cost of one
         rounding per leaf operand (depth-2 bf16 parity degrades to ~2e-2).
+      chaos: deterministic fault injection
+        (:class:`repro.blocks.recovery.ChaosConfig`): seeded block
+        drop/corrupt probabilities on the store and flaky-leaf dispatch
+        failures. Tests/benchmarks/CI only — injection implies
+        ``recovery`` unless explicitly disabled.
+      recovery: wrap the run's store in a
+        :class:`~repro.blocks.recovery.RecoveringStore` (checksum on put,
+        verify on get, transparent lineage recompute on loss/corruption).
+        ``None`` (default) enables it exactly when ``chaos`` is set; pass
+        True to harden a production run against a caller-shared store.
+      retries: bounded retry count per leaf multiply (exponential backoff
+        from ``retry_backoff_s``). Device-OOM is never retried — it goes
+        straight to the degradation ladder.
+      retry_backoff_s: first retry's sleep; doubles per attempt.
+      degrade: on an unrecovered fault or device-OOM, walk the
+        degradation ladder instead of failing the multiply: async
+        pipeline -> synchronous staging -> halved wave -> one level
+        deeper recursion. Each transition is a ``fault.degrade``
+        span/counter and lands in ``OotStats.degrade_events``.
     """
 
     def __init__(
@@ -371,17 +419,29 @@ class StrassenScheduler:
         block: Optional[int] = None,
         prefetch: bool = True,
         stage_dtype=None,
+        chaos: Optional[ChaosConfig] = None,
+        recovery: Optional[bool] = None,
+        retries: int = 2,
+        retry_backoff_s: float = 0.05,
+        degrade: bool = True,
     ) -> None:
         if depth < 1:
             raise ValueError("out-of-core Strassen needs depth >= 1")
         if budget_bytes <= 0:
             raise ValueError("budget_bytes must be positive")
+        if retries < 0 or retry_backoff_s < 0:
+            raise ValueError("retries and retry_backoff_s must be >= 0")
         self.depth = depth
         self.budget_bytes = int(budget_bytes)
         self.scheme = get_scheme(scheme) if isinstance(scheme, str) else scheme
         self.block = block
         self.prefetch = prefetch
         self.stage_dtype = stage_dtype
+        self.chaos = chaos
+        self.recovery = (chaos is not None) if recovery is None else bool(recovery)
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degrade = degrade
         if backend is None:
             from repro.core.backend import MatmulBackend
 
@@ -412,22 +472,41 @@ class StrassenScheduler:
 
     @staticmethod
     def _signed_sum(get_block, coefs: np.ndarray, acc_dtype) -> np.ndarray:
-        """sum_i coefs[i] * get_block(i) with zero-skip and +/-1 fast paths.
+        """Delegates to :func:`repro.blocks.blockmatrix.signed_block_sum`.
 
-        The one accumulation discipline both divide and combine share:
-        terms are read through ``.astype`` (ml_dtypes/bf16 memmaps fail
-        numpy's direct-cast buffer path) and summed in ``acc_dtype``.
+        Shared with lineage recompute (:mod:`repro.blocks.recovery`):
+        recovery is bit-exact precisely because both run the same loop.
         """
-        acc = None
-        for idx in range(len(coefs)):
-            c = float(coefs[idx])
-            if c == 0.0:
-                continue
-            blk = np.asarray(get_block(idx)).astype(acc_dtype, copy=False)
-            term = blk if c == 1.0 else (-blk if c == -1.0 else c * blk)
-            acc = term if acc is None else acc + term
-        assert acc is not None, "coefficient row is all zero"
-        return acc
+        return signed_block_sum(get_block, coefs, acc_dtype)
+
+    def _retry_leaf(self, fn, stats: "OotStats", mx):
+        """Run one leaf multiply with bounded retry + exponential backoff.
+
+        Only fault-typed failures (:class:`FaultError` — the chaos shim,
+        a flaky backend) retry, up to ``self.retries`` times. Device-OOM
+        raises immediately — re-issuing the identical allocation cannot
+        succeed, only the degradation ladder (smaller waves / deeper
+        recursion) can. Unknown exceptions also propagate untouched:
+        retrying a genuine bug would mask it and burn the backoff budget.
+        """
+        from repro.core.backend import is_oom_error
+
+        delay = self.retry_backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                return fn()
+            except Exception as e:
+                if (
+                    is_oom_error(e)
+                    or not isinstance(e, FaultError)
+                    or attempt >= self.retries
+                ):
+                    raise
+                stats.leaf_retries += 1
+                mx.counter("fault.retries").inc()
+                if delay > 0:
+                    time.sleep(delay)
+                delay = min(delay * 2, 2.0)
 
     def _divide_child(
         self,
@@ -484,7 +563,85 @@ class StrassenScheduler:
         ``a``/``b`` are host arrays (numpy or anything ``np.asarray``
         accepts, bfloat16 included). ``store`` picks the block residency:
         'dict' | 'arena' | 'memmap' or a ready :class:`BlockStore`.
+
+        Runs the graceful-degradation ladder: the configured mode first,
+        then — on an unrecovered fault (retries exhausted, lineage
+        recompute impossible) or device-OOM — synchronous staging, a
+        halved wave, and finally one level deeper recursion. Every rung
+        transition is a ``fault.degrade`` counter + instant span; the
+        returned stats carry the completed rung and the transition log.
+        Anything that is not a fault/OOM propagates unchanged from the
+        first attempt.
         """
+        from repro.core.backend import is_oom_error
+
+        # One flaky-leaf shim across the whole ladder: its dispatch-call
+        # counter spans attempts, so "fail the Nth leaf multiply" windows
+        # pass and the ladder can make progress.
+        flaky = None
+        if self.chaos is not None and self.chaos.injects_leaf_faults:
+            flaky = FlakyLeaf(
+                fail_calls=self.chaos.fail_leaf_calls,
+                fail_rate=self.chaos.leaf_fail_rate,
+                seed=self.chaos.seed + 1,
+            )
+        rungs: List[Tuple[str, dict]] = []
+        if self.prefetch:
+            rungs.append(
+                ("pipeline", dict(prefetch=True, wave_scale=1.0, depth=self.depth))
+            )
+        rungs.append(("sync", dict(prefetch=False, wave_scale=1.0, depth=self.depth)))
+        rungs.append(
+            ("halved-wave", dict(prefetch=False, wave_scale=0.5, depth=self.depth))
+        )
+        rungs.append(
+            ("deeper", dict(prefetch=False, wave_scale=0.5, depth=self.depth + 1))
+        )
+        if not self.degrade:
+            rungs = rungs[:1]
+        tr = obs_tracer.get_tracer()
+        mx = obs_metrics.get_metrics()
+        degrade_log: List[dict] = []
+        for idx, (name, overrides) in enumerate(rungs):
+            try:
+                result, stats = self._attempt(
+                    a, b, store=store, store_root=store_root, flaky=flaky,
+                    **overrides,
+                )
+            except Exception as e:
+                recoverable = isinstance(e, FaultError) or is_oom_error(e)
+                if idx == len(rungs) - 1 or not recoverable:
+                    raise
+                nxt = rungs[idx + 1][0]
+                mx.counter("fault.degrade").inc()
+                tr.event(
+                    "fault.degrade", cat="fault",
+                    rung_from=name, rung_to=nxt, cause=type(e).__name__,
+                )
+                degrade_log.append(
+                    {"from": name, "to": nxt, "cause": f"{type(e).__name__}: {e}"[:200]}
+                )
+                continue
+            stats.rung = name
+            stats.degrades = len(degrade_log)
+            stats.degrade_events = degrade_log
+            _record_run(stats)
+            return result, stats
+        raise AssertionError("degradation ladder must return or raise")
+
+    def _attempt(
+        self,
+        a: np.ndarray,
+        b: np.ndarray,
+        *,
+        store: str | BlockStore,
+        store_root: Optional[str],
+        depth: int,
+        prefetch: bool,
+        wave_scale: float,
+        flaky: Optional[FlakyLeaf],
+    ) -> Tuple[np.ndarray, OotStats]:
+        """One run of the level-order executor at a fixed ladder rung."""
         import jax
 
         # Spans are the run's single timing source: OotStats (wave_events,
@@ -505,7 +662,7 @@ class StrassenScheduler:
         acc_dtype = np.result_type(dtype, np.float32)
         m, k = a.shape
         n = b.shape[1]
-        depth, rank = self.depth, self.scheme.n_mults
+        rank = self.scheme.n_mults
 
         # Recursion-aligned padded dims and the block partition. With an
         # explicit block grain each leaf dim rounds up to a whole number of
@@ -540,7 +697,6 @@ class StrassenScheduler:
         # 2 * per_leaf + in_bytes (pipelined_leaf_bytes). Sizing waves at
         # that slot makes the budget bound hold at the *pipelined* peak,
         # not just the quiescent single-wave state.
-        prefetch = self.prefetch
         wave_size = self.budget_bytes // (2 * per_leaf + in_bytes) if prefetch else 0
         if wave_size < 1:
             prefetch = False
@@ -552,6 +708,11 @@ class StrassenScheduler:
                 f"use depth >= "
                 f"{min_depth_for_budget(m, k, n, self.budget_bytes, dtype)}"
             )
+        if wave_scale != 1.0:
+            # Degradation rung: shrink waves below what the budget allows
+            # (never below one leaf — single-leaf feasibility was checked
+            # above, so this only trades throughput for headroom).
+            wave_size = max(1, int(wave_size * wave_scale))
 
         # Divide/combine chains accumulate (and store) in acc_dtype; blocks
         # round at most once — operands at the staging cast, C at the final
@@ -566,11 +727,50 @@ class StrassenScheduler:
         # Stores built here from a spec are owned (and closed) here;
         # caller-provided BlockStore instances stay open for inspection —
         # and may be shared across runs, so this run's puts are tracked
-        # and the failure path deletes only those.
+        # and the failure path deletes only those. Layering, bottom up:
+        # base store -> run tracking -> chaos injection (faults must hit
+        # the raw bytes) -> recovering wrapper (checksums + lineage
+        # recompute sit ABOVE the injector, so injected faults are
+        # detected and healed like real ones).
         owned_store = not isinstance(store, BlockStore)
-        store = make_store(store, slot_bytes=slot_bytes, root=store_root)
+        base = make_store(store, slot_bytes=slot_bytes, root=store_root)
+        inner: BlockStore = base
+        tracking: Optional[_RunTrackingStore] = None
         if not owned_store:
-            store = _RunTrackingStore(store)
+            tracking = _RunTrackingStore(inner)
+            inner = tracking
+        chaos_store: Optional[ChaosStore] = None
+        if self.chaos is not None and self.chaos.injects_store_faults:
+            chaos_store = ChaosStore(
+                inner,
+                drop=self.chaos.drop,
+                corrupt=self.chaos.corrupt,
+                seed=self.chaos.seed,
+            )
+            inner = chaos_store
+        recovering: Optional[RecoveringStore] = None
+        if self.recovery:
+
+            def lineage_leaf(a_host: np.ndarray, b_host: np.ndarray) -> np.ndarray:
+                # Replays one leaf through the same device path the waves
+                # use (device_put -> routed leaf matmul -> fenced fetch),
+                # so a recomputed leaf product is bit-identical. Runs only
+                # while the device is otherwise idle (divide/combine), so
+                # one leaf's working set — already <= the budget — is the
+                # whole recovery footprint.
+                a_dev = jax.device_put(a_host)
+                b_dev = jax.device_put(b_host)
+                return np.asarray(jax.block_until_ready(self._leaf_matmul(a_dev, b_dev)))
+
+            lineage = Lineage(
+                scheme=self.scheme, depth=depth, a=a, b=b,
+                pm=pm, pk=pk, pn=pn, bam=bam, bak=bak, bbn=bbn,
+                acc_dtype=np.dtype(acc_dtype), stage_dtype=stage_dtype,
+                leaf_matmul=lineage_leaf,
+            )
+            recovering = RecoveringStore(inner, lineage)
+            inner = recovering
+        store = inner
         root_span = tr.begin(
             "oot.matmul", cat="oot",
             m=m, k=k, n=n, depth=depth, scheme=self.scheme.name,
@@ -726,7 +926,16 @@ class StrassenScheduler:
                         "leaf.mul", cat="oot", tag=tags.to_string(path),
                         track="oot.dispatch", wave=w_idx,
                     ):
-                        out = self._leaf_matmul(a_dev, b_dev)
+
+                        def call(a_dev=a_dev, b_dev=b_dev):
+                            # The chaos shim fails the dispatch the way a
+                            # flaky backend would — before issue, so a
+                            # retry is a genuinely fresh dispatch.
+                            if flaky is not None:
+                                flaky.check()
+                            return self._leaf_matmul(a_dev, b_dev)
+
+                        out = self._retry_leaf(call, stats, mx)
                     refs.append(out)
                     outs.append((path, out))
                 # Multiplies issued: drop this wave's operand refs (XLA
@@ -750,8 +959,53 @@ class StrassenScheduler:
                         "leaf.fetch", cat="oot", tag=tags.to_string(path),
                         track="oot.fetch", wave=w_idx,
                     ) as lsp:
-                        out = jax.block_until_ready(out)  # the only fence
-                        host = np.asarray(out)
+                        try:
+                            out = jax.block_until_ready(out)  # the only fence
+                            host = np.asarray(out)
+                        except Exception as fence_exc:
+                            from repro.core.backend import is_oom_error
+
+                            if is_oom_error(fence_exc) or not isinstance(
+                                fence_exc, FaultError
+                            ):
+                                # OOM goes to the ladder; unknown errors
+                                # propagate (same policy as _retry_leaf).
+                                raise
+                            # A fault-typed async failure surfaced at the
+                            # fence. Drop the dead buffer, then replay this
+                            # one leaf synchronously from the host blocks
+                            # (still in the store until free() below) —
+                            # reaching here already cost one attempt, so it
+                            # counts as a retry before the bounded loop.
+                            try:
+                                out.delete()
+                            except Exception:
+                                pass
+                            stats.leaf_retries += 1
+                            mx.counter("fault.retries").inc()
+
+                            def redo(path=path):
+                                if flaky is not None:
+                                    flaky.check()
+                                na = self._node(
+                                    store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                                )
+                                nb = self._node(
+                                    store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                                )
+                                a_dev = jax.device_put(
+                                    na.to_dense().astype(stage_dtype, copy=False)
+                                )
+                                b_dev = jax.device_put(
+                                    nb.to_dense().astype(stage_dtype, copy=False)
+                                )
+                                return np.asarray(
+                                    jax.block_until_ready(
+                                        self._leaf_matmul(a_dev, b_dev)
+                                    )
+                                )
+
+                            host = self._retry_leaf(redo, stats, mx)
                         stats.d2h_bytes += host.nbytes
                         wave_d2h += host.nbytes
                         lsp.set(d2h_bytes=host.nbytes)
@@ -907,8 +1161,8 @@ class StrassenScheduler:
                     except Exception:
                         pass
             in_flight.clear()
-            if not owned_store:
-                store.drop_created()
+            if tracking is not None:
+                tracking.drop_created()
             # Close the root span (end() pops any children the unwind left
             # open) so the tracer's per-thread stack stays consistent for
             # whatever the caller runs next.
@@ -916,7 +1170,21 @@ class StrassenScheduler:
             raise
         finally:
             if owned_store:
-                store.close()
+                base.close()
+        # Fault telemetry: what the wrappers detected/healed this attempt
+        # (retries were counted in place; injected counts are cumulative
+        # for the flaky shim, whose call counter spans ladder rungs).
+        if recovering is not None:
+            stats.recovered_blocks = recovering.recovered_blocks
+            stats.lost_blocks = recovering.lost_blocks
+            stats.corrupt_blocks = recovering.corrupt_blocks
+            stats.unrecovered_faults = recovering.recompute_mismatches
+        if chaos_store is not None:
+            stats.injected_faults += (
+                chaos_store.injected_drops + chaos_store.injected_corruptions
+            )
+        if flaky is not None:
+            stats.injected_faults += flaky.injected
         stats.total_s = tr.end(root_span).duration
         stats.finalize_overlap()
         root_span.set(
@@ -925,7 +1193,6 @@ class StrassenScheduler:
             h2d_bytes=stats.h2d_bytes,
             d2h_bytes=stats.d2h_bytes,
         )
-        _record_run(stats)
         return result, stats
 
 
@@ -942,6 +1209,11 @@ def strassen_oot_matmul(
     stage_dtype=None,
     store: str | BlockStore = "dict",
     store_root: Optional[str] = None,
+    chaos: Optional[ChaosConfig] = None,
+    recovery: Optional[bool] = None,
+    retries: int = 2,
+    retry_backoff_s: float = 0.05,
+    degrade: bool = True,
 ) -> Tuple[np.ndarray, OotStats]:
     """Functional wrapper: one out-of-core Strassen multiply.
 
@@ -953,5 +1225,7 @@ def strassen_oot_matmul(
     sched = StrassenScheduler(
         depth=depth, budget_bytes=budget_bytes, scheme=scheme,
         backend=backend, block=block, prefetch=prefetch, stage_dtype=stage_dtype,
+        chaos=chaos, recovery=recovery, retries=retries,
+        retry_backoff_s=retry_backoff_s, degrade=degrade,
     )
     return sched.matmul(a, b, store=store, store_root=store_root)

@@ -122,6 +122,26 @@ def enable_xla_async_flags(flags: Tuple[str, ...] = XLA_ASYNC_FLAGS) -> bool:
     return not initialized
 
 
+def is_oom_error(exc: BaseException) -> bool:
+    """Classify a device out-of-memory failure, across jax versions.
+
+    XLA surfaces OOM as ``XlaRuntimeError`` with RESOURCE_EXHAUSTED (the
+    type's import path has moved repeatedly, so match by name) or as a
+    generic RuntimeError carrying an allocator message. The out-of-core
+    scheduler treats OOM differently from transient faults: retrying the
+    same dispatch cannot succeed, so it skips straight to the
+    degradation ladder (smaller waves, deeper recursion).
+    """
+    names = {t.__name__ for t in type(exc).__mro__}
+    msg = str(exc)
+    markers = ("RESOURCE_EXHAUSTED", "Out of memory", "out of memory", "OOM")
+    if "XlaRuntimeError" in names and any(m in msg for m in markers):
+        return True
+    if isinstance(exc, MemoryError):
+        return True
+    return isinstance(exc, RuntimeError) and any(m in msg for m in markers)
+
+
 @dataclasses.dataclass(frozen=True)
 class MatmulBackend:
     """Configuration for routing matmuls.

@@ -46,6 +46,12 @@ def main():
                     help="disable the async 2-deep staging pipeline")
     ap.add_argument("--check", action="store_true",
                     help="verify against the dense jnp.matmul")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos injection: per-get block drop probability "
+                    "(corruption and leaf failures are injected at "
+                    "proportional rates); recovery recomputes from lineage")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the deterministic chaos harness")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None, help="write stats JSON here")
     ap.add_argument("--trace-out", default=None,
@@ -85,12 +91,29 @@ def main():
         flush=True,
     )
 
+    chaos = None
+    if args.fault_rate > 0:
+        from repro.blocks.recovery import ChaosConfig
+
+        chaos = ChaosConfig(
+            drop=args.fault_rate,
+            corrupt=args.fault_rate * 0.4,
+            leaf_fail_rate=args.fault_rate * 0.5,
+            seed=args.chaos_seed,
+        )
+        print(
+            f"chaos: drop {chaos.drop:.3f} / corrupt {chaos.corrupt:.3f} / "
+            f"leaf-fail {chaos.leaf_fail_rate:.3f} (seed {chaos.seed}) — "
+            "lineage recovery on"
+        )
+
     backend = MatmulBackend(kind=args.leaf_backend, depth=2)
     out, stats = strassen_oot_matmul(
         a, b,
         depth=depth, budget_bytes=budget, scheme=args.scheme, backend=backend,
         block=args.block or None, prefetch=not args.no_prefetch,
         store=args.store, store_root=args.store_root,
+        chaos=chaos,
     )
 
     print(
@@ -110,6 +133,15 @@ def main():
         f"({stats.stage_dtype} staging)"
     )
     print(f"host store peak: {stats.host_store_peak_bytes / 2**20:.1f} MiB ({args.store})")
+    if chaos is not None:
+        print(
+            f"faults: {stats.injected_faults} injected "
+            f"({stats.lost_blocks} lost, {stats.corrupt_blocks} corrupt) | "
+            f"{stats.recovered_blocks} recomputed from lineage, "
+            f"{stats.leaf_retries} leaf retries, "
+            f"{stats.unrecovered_faults} unrecovered | "
+            f"rung {stats.rung} ({stats.degrades} degrades)"
+        )
 
     if args.check:
         import jax.numpy as jnp

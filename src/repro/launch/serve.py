@@ -53,6 +53,10 @@ def main():
                     default="continuous",
                     help="scheduler: continuous admits mid-decode; static "
                     "gang-schedules full batches (baseline)")
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="per-request watchdog seconds: a request still "
+                    "decoding past this is evicted (reason 'timeout') and "
+                    "its pages freed; 0 disables")
     ap.add_argument("--mesh", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
@@ -116,6 +120,7 @@ def main():
                 admission=args.admission,
                 sync_interval=args.sync_interval,
                 batching=args.batching,
+                request_timeout_s=args.request_timeout,
             ),
         )
         prompts = jax.random.randint(

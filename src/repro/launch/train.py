@@ -28,9 +28,14 @@ from repro.launch.mesh import make_mesh_for
 from repro.launch.specs import batch_logical_axes, param_logical_axes, sharding_tree
 from repro.models.sharding import DEFAULT_RULES, use_sharding
 from repro.optim.adamw import AdamWConfig
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import CheckpointManager, save_pytree
 from repro.runtime.elastic import StragglerMonitor
 from repro.training.train_step import init_train_state, make_train_step
+
+# Clean exit for "checkpointed and stopped on sustained straggler": the
+# job supervisor restarts the run (plan_mesh re-fits to the survivors)
+# instead of treating it as a crash. Mirrors EX_TEMPFAIL.
+STRAGGLER_EXIT_CODE = 75
 
 
 def build(cfg, opt_cfg, *, batch, seq, accum, mesh=None, rules=DEFAULT_RULES, seed=0):
@@ -81,12 +86,20 @@ def train_loop(
     log_every=10,
     seed=0,
     stats_out=None,
+    stop_on_straggler=False,
 ):
     """Run the training loop; returns (state, loss history).
 
     ``stats_out``: optional dict filled with run measurements
     (median_step_time_s, steps_run) — the step-time evidence the summary
     JSON and the autotune-vs-hand-picked comparison report.
+
+    ``stop_on_straggler``: when the watchdog flags a sustained slowdown,
+    force-save a checkpoint (regardless of ``save_every`` alignment) and
+    stop the loop cleanly; the flag's evidence lands in
+    ``stats_out['straggler']`` so the launcher can exit with
+    :data:`STRAGGLER_EXIT_CODE`. Off, the flag is logged and training
+    continues (the library-default behavior tests rely on).
     """
     state, data, jitted = build(
         cfg, opt_cfg, batch=batch, seq=seq, accum=accum, mesh=mesh, seed=seed
@@ -121,12 +134,27 @@ def train_loop(
             if mgr:
                 mgr.maybe_save(state, step_i + 1, extra={"loss": loss})
             if flagged:
-                print("[straggler] sustained slowdown — checkpoint + restart advised")
+                reason = watchdog.flag_reason()
+                print(
+                    f"[straggler] sustained slowdown "
+                    f"(step/median x{reason['median']:.2f}, "
+                    f"streak {reason['streak']}) — checkpoint + restart advised"
+                )
+                if stop_on_straggler:
+                    if ckpt_dir:
+                        save_pytree(
+                            state, ckpt_dir, step=step_i + 1,
+                            extra={"loss": loss, "straggler": reason},
+                        )
+                        print(f"[straggler] checkpointed step {step_i + 1}; stopping")
+                    if stats_out is not None:
+                        stats_out["straggler"] = reason
+                    break
                 if mgr:
                     mgr.maybe_save(state, step_i + 1, extra={"straggler": True})
     if stats_out is not None:
         stats_out["median_step_time_s"] = watchdog.median_step_time
-        stats_out["steps_run"] = steps - start
+        stats_out["steps_run"] = len(history)  # executed, not planned
     return state, history
 
 
@@ -208,6 +236,11 @@ def main():
         "hand-picked (config default) backend and record the measured "
         "step-time delta in the summary JSON",
     )
+    ap.add_argument(
+        "--no-exit-on-straggler", action="store_true",
+        help="keep training through a straggler flag instead of "
+        "checkpointing and exiting with code 75 for a supervised restart",
+    )
     ap.add_argument("--summary-out", default=None,
                     help="write a run-summary JSON (loss, step time, "
                     "backend, autotune telemetry) here")
@@ -249,9 +282,10 @@ def main():
         steps=args.steps, batch=per_host, seq=args.seq, accum=args.accum,
         mesh=mesh, ckpt_dir=args.ckpt_dir, save_every=args.save_every,
         stats_out=run_stats,
+        stop_on_straggler=not args.no_exit_on_straggler,
     )
     dt = time.time() - t0
-    print(f"done: {args.steps} steps in {dt:.1f}s; loss {history[0]:.3f} -> {history[-1]:.3f}")
+    print(f"done: {len(history)} steps in {dt:.1f}s; loss {history[0]:.3f} -> {history[-1]:.3f}")
 
     summary = {
         "arch": args.arch,
@@ -289,6 +323,8 @@ def main():
 
         export.write_trace(args.trace_out, metrics=obs.get_metrics())
         print(f"wrote {args.trace_out}")
+    if "straggler" in run_stats:
+        raise SystemExit(STRAGGLER_EXIT_CODE)
 
 
 if __name__ == "__main__":

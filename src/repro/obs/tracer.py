@@ -249,14 +249,15 @@ class Tracer:
         self._retain(sp)
         return sp
 
-    def event(self, name: str, *, tag: Optional[str] = None,
-              track: Optional[str] = None, **attrs: Any) -> Optional[Span]:
-        """Instant event (zero-duration span, cat='instant')."""
+    def event(self, name: str, *, cat: str = "instant",
+              tag: Optional[str] = None, track: Optional[str] = None,
+              **attrs: Any) -> Optional[Span]:
+        """Instant event (zero-duration span, cat='instant' by default)."""
         if not self.enabled:
             return None
         now = time.perf_counter()
         return self.add_span(
-            name, now, now, cat="instant", tag=tag, track=track,
+            name, now, now, cat=cat, tag=tag, track=track,
             parent=self.current(), **attrs,
         )
 

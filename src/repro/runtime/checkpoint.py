@@ -3,12 +3,15 @@
 Layout: <dir>/step_<n>/  arrays.npz  manifest.json
 Writes go to a temp directory then os.replace() — a crash mid-write never
 corrupts the latest checkpoint (restore scans for the newest COMPLETE
-manifest). The manifest records step, mesh shape, and tree structure so an
-elastic restart can validate (and re-mesh) before loading.
+manifest). The manifest records step, mesh shape, tree structure, and a
+sha256 digest of the array payload; ``load_pytree`` re-hashes the payload
+and raises :class:`CheckpointError` on any mismatch, torn write, or
+partial checkpoint instead of silently loading corrupt parameters.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -22,10 +25,22 @@ import numpy as np
 
 from repro.obs import tracer as obs_tracer
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = ["CheckpointError", "CheckpointManager", "save_pytree", "load_pytree"]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, torn, partial, or fails digest verification."""
+
+
+def _digest_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return "sha256:" + h.hexdigest()
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -59,6 +74,7 @@ def save_pytree(tree, directory: str, *, step: int, extra: Optional[Dict] = None
             "time": time.time(),
             "n_arrays": len(arrays),
             "devices": jax.device_count(),
+            "digest": _digest_file(os.path.join(tmp, _ARRAYS)),
             "extra": extra or {},
             "complete": True,
         }
@@ -78,11 +94,50 @@ def save_pytree(tree, directory: str, *, step: int, extra: Optional[Dict] = None
 
 
 def load_pytree(template, path: str):
-    """Load arrays into the structure of ``template`` (shapes must match)."""
+    """Load arrays into the structure of ``template`` (shapes must match).
+
+    Verifies the checkpoint before handing parameters back: the manifest
+    must exist, parse, and be marked complete; when it carries a payload
+    digest (checkpoints from older versions may not), the array file is
+    re-hashed and compared. Any violation — missing files, torn JSON,
+    digest mismatch, keys absent from the payload — raises
+    :class:`CheckpointError` naming the failure.
+    """
     with obs_tracer.get_tracer().span(
         "ckpt.load", cat="runtime", track="runtime", path=os.path.basename(path)
     ):
-        data = np.load(os.path.join(path, _ARRAYS))
+        manifest_path = os.path.join(path, _MANIFEST)
+        arrays_path = os.path.join(path, _ARRAYS)
+        if not os.path.exists(manifest_path):
+            raise CheckpointError(f"checkpoint {path}: missing {_MANIFEST}")
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except (ValueError, json.JSONDecodeError) as e:
+            raise CheckpointError(
+                f"checkpoint {path}: torn manifest ({e})"
+            ) from e
+        if not manifest.get("complete"):
+            raise CheckpointError(
+                f"checkpoint {path}: manifest not marked complete "
+                "(partial or interrupted write)"
+            )
+        if not os.path.exists(arrays_path):
+            raise CheckpointError(f"checkpoint {path}: missing {_ARRAYS}")
+        want = manifest.get("digest")
+        if want is not None:
+            got = _digest_file(arrays_path)
+            if got != want:
+                raise CheckpointError(
+                    f"checkpoint {path}: array payload digest mismatch "
+                    f"(manifest {want}, file {got}) — corrupt checkpoint"
+                )
+        try:
+            data = np.load(arrays_path)
+        except (ValueError, OSError) as e:
+            raise CheckpointError(
+                f"checkpoint {path}: unreadable {_ARRAYS} ({e})"
+            ) from e
         by_key = {}
         for key in data.files:
             if key.endswith("::bf16"):
@@ -91,8 +146,17 @@ def load_pytree(template, path: str):
                 by_key[key] = data[key]
         leaves = []
         for key, leaf in _flatten_with_paths(template):
+            if key not in by_key:
+                raise CheckpointError(
+                    f"checkpoint {path}: payload missing array {key!r} "
+                    "(partial checkpoint?)"
+                )
             arr = by_key[key]
-            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            if arr.shape != tuple(leaf.shape):
+                raise CheckpointError(
+                    f"checkpoint {path}: shape mismatch for {key!r}: "
+                    f"saved {arr.shape}, template {tuple(leaf.shape)}"
+                )
             leaves.append(jnp.asarray(arr))
         return jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), leaves

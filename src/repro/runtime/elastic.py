@@ -25,6 +25,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
 from repro.obs import tracer as obs_tracer
 
 __all__ = ["plan_mesh", "rebalance_accum", "StragglerMonitor", "ElasticError"]
@@ -70,7 +71,20 @@ def rebalance_accum(
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    """Rolling-median step-time watchdog; flags sustained slowdowns."""
+    """Rolling-median step-time watchdog; flags sustained slowdowns.
+
+    The flag has two components, both surfaced as obs gauges every step
+    so the slowdown is diagnosable from the metrics stream alone:
+
+      ``elastic.step_over_median`` — the *median* signal: last step's
+        wall-clock as a multiple of the rolling median (> ``threshold``
+        counts the step as slow).
+      ``elastic.slow_streak`` — the *streak* signal: consecutive slow
+        steps so far (>= ``patience`` raises the flag).
+
+    :meth:`flag_reason` returns the same pair for the caller that acts
+    on the flag (checkpoint + clean exit in ``launch/train.py``).
+    """
 
     window: int = 32
     threshold: float = 2.0  # x median
@@ -81,6 +95,7 @@ class StragglerMonitor:
         self._slow_streak = 0
         self._span: Optional[obs_tracer.Span] = None
         self._step_idx = 0
+        self._last_ratio = 0.0
 
     def start_step(self):
         # begin() hands back a timed Span even when tracing is disabled, so
@@ -98,11 +113,27 @@ class StragglerMonitor:
         self._step_idx += 1
         median = sorted(self._times)[len(self._times) // 2] if self._times else dt
         self._times.append(dt)
+        self._last_ratio = dt / median if median > 0 else 0.0
         if len(self._times) >= self.window // 2 and dt > self.threshold * median:
             self._slow_streak += 1
         else:
             self._slow_streak = 0
-        return self._slow_streak >= self.patience
+        mx = obs_metrics.get_metrics()
+        mx.gauge("elastic.step_over_median").set(self._last_ratio)
+        mx.gauge("elastic.slow_streak").set(self._slow_streak)
+        flagged = self._slow_streak >= self.patience
+        if flagged:
+            mx.counter("elastic.straggler_flags").inc()
+            obs_tracer.get_tracer().event(
+                "elastic.straggler_flag", cat="train", track="train",
+                median=self._last_ratio, streak=self._slow_streak,
+            )
+        return flagged
+
+    def flag_reason(self) -> dict:
+        """The flag's evidence: {'median': last step / rolling median,
+        'streak': consecutive slow steps}."""
+        return {"median": self._last_ratio, "streak": self._slow_streak}
 
     @property
     def median_step_time(self) -> float:

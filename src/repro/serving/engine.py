@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.blocks.recovery import FaultError, InjectedFault
 from repro.core import autotune
 from repro.models import model as M
 from repro.obs import metrics as obs_metrics
@@ -74,6 +75,10 @@ class ServeConfig:
     batching: str = "continuous"  # "continuous" | "static" (gang baseline)
     sync_interval: int = 4  # decode steps between host<->device token syncs
     decode_pages: int = 0  # gathered pages per step; 0 = pow2 bucketing
+    # Per-request watchdog: a request still decoding this many seconds
+    # after admission is evicted with finish_reason="timeout" and its
+    # pages returned to the pool. 0 disables the watchdog.
+    request_timeout_s: float = 0.0
 
     def __post_init__(self):
         if self.admission not in ("queue", "reject"):
@@ -87,6 +92,10 @@ class ServeConfig:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
         if self.page_budget < 0 or self.decode_pages < 0 or self.max_queue < 0:
             raise ValueError("page_budget/decode_pages/max_queue must be >= 0")
+        if self.request_timeout_s < 0:
+            raise ValueError(
+                f"request_timeout_s must be >= 0, got {self.request_timeout_s}"
+            )
 
     @property
     def table_width(self) -> int:
@@ -122,6 +131,8 @@ class _ServeStats:
     admitted: int = 0
     finished: int = 0
     evicted: int = 0
+    errors: int = 0
+    timeouts: int = 0
     rejected: int = 0
     prefills: int = 0
     decode_steps: int = 0
@@ -354,6 +365,7 @@ class Engine:
         seed: Optional[int] = None,
         on_token: Optional[Callable] = None,
         _key: Optional[np.ndarray] = None,
+        _inject_fault_at: Optional[int] = None,
     ) -> RequestHandle:
         """Queue one request; returns immediately with a RequestHandle.
 
@@ -362,6 +374,13 @@ class Engine:
         REJECTED when it cannot start right now. Requests that can
         *never* fit (sequence beyond max_seq, pages beyond the pool
         capacity) raise ValueError.
+
+        ``_inject_fault_at`` is the chaos-harness hook: the request's
+        k-th decode dispatch raises :class:`InjectedFault` (k counts
+        tokens already emitted, so ``1`` fails the first decode step
+        after the prefill token; ``0`` fails the prefill itself). The
+        engine's fault isolation evicts exactly that request with
+        ``finish_reason='error'``; survivors are untouched.
         """
         self._ensure_serving()
         prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -398,6 +417,7 @@ class Engine:
         )
         req._key = np.asarray(key, np.uint32)  # type: ignore[attr-defined]
         req._emitted_est = 0  # type: ignore[attr-defined]
+        req._fault_at = _inject_fault_at  # type: ignore[attr-defined]
         self._next_id += 1
         self._requests[req.id] = req
         self._stats.submitted += 1
@@ -436,6 +456,7 @@ class Engine:
         tokens surface at sync boundaries, not every step).
         """
         events: List[TokenEvent] = []
+        self._check_timeouts()
         if self._drain_due():
             events.extend(self._drain())
         self._try_admit()
@@ -539,7 +560,27 @@ class Engine:
         batch = {"tokens": jnp.asarray(req.prompt[None, :])}
         if self.cfg.mrope:
             batch["positions"] = make_stub_positions(1, s)
-        logits, filled = self._prefill(self.params, batch, pre_cache)
+        try:
+            if getattr(req, "_fault_at", None) == 0:
+                err = InjectedFault(f"injected prefill failure (request {req.id})")
+                err.request_id = req.id  # type: ignore[attr-defined]
+                raise err
+            logits, filled = self._prefill(self.params, batch, pre_cache)
+        except FaultError as e:
+            # Prefill is batch-1, so the culprit is exact: release its
+            # pages and slot, mark it errored, and keep serving. Device
+            # slot state was never touched (the insert never ran).
+            if isinstance(e, InjectedFault):
+                self.metrics.counter("fault.injected_faults").inc()
+            self.metrics.counter("fault.evicted_requests").inc()
+            obs_tracer.get_tracer().end(span, error=type(e).__name__)
+            obs_tracer.get_tracer().event(
+                "fault.evict", cat="fault", tag=f"req{req.id}",
+                track=f"serve.req/{req.id}", cause=type(e).__name__,
+                phase="prefill",
+            )
+            self._finish(req, "error")
+            return
 
         n_prompt_pages = capacity // ps
         page_row = np.zeros((self._layout.table_width,), np.int32)
@@ -602,13 +643,94 @@ class Engine:
         return min(bucket, layout.table_width)
 
     def _dispatch_decode(self) -> bool:
-        live = self._host_live()
-        if not live:
-            return False
+        """Dispatch one decode step, isolating per-request faults.
+
+        A fault-typed dispatch failure (injected or device-raised before
+        the state assignment) evicts only the culprit request — the
+        jitted step's results are assigned in one statement, so a raise
+        leaves ``_kv``/``_meta`` untouched and every surviving slot
+        continues bit-identically. Bounded retry: each attempt can evict
+        at most one request, so ``slots + 1`` attempts suffice.
+        """
+        for _ in range(self.serve.slots + 1):
+            live = self._host_live()
+            if not live:
+                return False
+            try:
+                return self._dispatch_decode_once(live)
+            except FaultError as e:
+                self._isolate_decode_fault(e, live)
+        return False
+
+    def _isolate_decode_fault(self, exc: FaultError, live) -> None:
+        """Evict the request a failed decode dispatch is attributed to.
+
+        Attribution: an :class:`InjectedFault` carries ``request_id``;
+        anonymous fault-typed failures blame the newest-admitted live
+        request (the one whose admission most recently changed the
+        batch composition). Buffered tokens are drained first so every
+        already-computed token is delivered before the eviction.
+        """
+        self._drain()
+        rid = getattr(exc, "request_id", None)
+        culprit = self._requests.get(rid) if rid is not None else None
+        if culprit is None or culprit.done:
+            cands = [r for r in self._active.values() if not r.done]
+            if not cands:
+                return  # the failure's request finished at the drain
+            culprit = max(cands, key=lambda r: (r.t_admit or 0.0, r.id))
+        if isinstance(exc, InjectedFault):
+            self.metrics.counter("fault.injected_faults").inc()
+        self.metrics.counter("fault.evicted_requests").inc()
+        obs_tracer.get_tracer().event(
+            "fault.evict", cat="fault", tag=f"req{culprit.id}",
+            track=f"serve.req/{culprit.id}", cause=type(exc).__name__,
+            phase="decode",
+        )
+        self._finish(culprit, "error")
+
+    def _check_timeouts(self) -> None:
+        """Per-request watchdog: evict admitted requests that have been
+        decoding longer than ``request_timeout_s`` (pages freed, reason
+        ``'timeout'``); survivors and delivered tokens are unaffected."""
+        limit = self.serve.request_timeout_s
+        if not limit or not self._active:
+            return
+        now = time.perf_counter()
+        expired = [
+            r
+            for r in self._active.values()
+            if (now - (r.t_admit if r.t_admit is not None else r.t_submit)) > limit
+        ]
+        if not expired:
+            return
+        self._drain()  # deliver everything computed before the cut
+        for req in expired:
+            if req.done:
+                continue
+            self.metrics.counter("fault.timeouts").inc()
+            self.metrics.counter("fault.evicted_requests").inc()
+            obs_tracer.get_tracer().event(
+                "fault.evict", cat="fault", tag=f"req{req.id}",
+                track=f"serve.req/{req.id}", cause="timeout",
+            )
+            self._finish(req, "timeout")
+
+    def _dispatch_decode_once(self, live) -> bool:
         span = obs_tracer.get_tracer().begin(
             "engine.decode_step", cat="serve", track="serve.engine",
             live=len(live),
         )
+        for _, req in live:
+            fa = getattr(req, "_fault_at", None)
+            if fa is not None and req._emitted_est >= fa:  # type: ignore[attr-defined]
+                obs_tracer.get_tracer().end(span, error="InjectedFault")
+                err = InjectedFault(
+                    f"injected decode failure (request {req.id}, "
+                    f"emitted {req._emitted_est})"  # type: ignore[attr-defined]
+                )
+                err.request_id = req.id  # type: ignore[attr-defined]
+                raise err
         mask = np.zeros((self.serve.slots,), bool)
         for slot, _ in live:
             mask[slot] = True
@@ -689,9 +811,13 @@ class Engine:
     def _finish(self, req: Request, reason: str) -> None:
         req.finish_reason = reason
         req.t_finish = time.perf_counter()
-        if reason == "evicted":
+        if reason in ("evicted", "error", "timeout"):
             req.state = RequestState.EVICTED
             self._stats.evicted += 1
+            if reason == "error":
+                self._stats.errors += 1
+            elif reason == "timeout":
+                self._stats.timeouts += 1
         else:
             req.state = RequestState.FINISHED
             self._stats.finished += 1
@@ -910,6 +1036,8 @@ class Engine:
                 "admitted": st.admitted,
                 "finished": st.finished,
                 "evicted": st.evicted,
+                "errors": st.errors,
+                "timeouts": st.timeouts,
                 "rejected": st.rejected,
             },
             "prefills": st.prefills,

@@ -5,6 +5,10 @@ A request moves through::
     submit() -> QUEUED -> PREFILL -> DECODING -> FINISHED
                       \\-> REJECTED          \\-> EVICTED
 
+EVICTED covers user eviction (``finish_reason='evicted'``), fault
+isolation (``'error'`` — a decode/prefill fault attributed to this
+request), and the per-request watchdog (``'timeout'``).
+
 Tokens stream to the caller through an optional ``on_token`` callback
 (fired at every engine sync with the newly arrived token ids, in
 emission order) and through :meth:`RequestHandle.tokens` snapshots.
@@ -63,7 +67,9 @@ class Request:
     slot: Optional[int] = None
     page_ids: List[int] = dataclasses.field(default_factory=list)
     tokens: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None  # "eos" | "length" | "evicted"
+    # "eos" | "length" | "evicted" | "error" (fault isolation) |
+    # "timeout" (request_timeout_s watchdog) | "rejected"
+    finish_reason: Optional[str] = None
 
     # telemetry (wall-clock, perf_counter domain)
     t_submit: float = 0.0
