@@ -19,6 +19,7 @@ def main() -> None:
         fig12_scalability,
         roofline_table,
         serve_load,
+        spin_scaling,
         strassen_hlo,
         table6_single_node,
         table7_leaf,
@@ -37,6 +38,7 @@ def main() -> None:
         "hlo": strassen_hlo.run,
         "roofline": roofline_table.run,
         "serve_load": serve_load.run,
+        "spin_scaling": spin_scaling.run,
     }
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,352 @@
+"""SPIN block-recursive inversion at scale: wall clock vs matrix size.
+
+The recursive-plan layer (PR 10) generalizes the tagged out-of-core
+runtime beyond multiplication; this benchmark drives its headline new
+operator — SPIN-style block-recursive inversion — across sizes under a
+*capped device-memory budget*. Every dense leaf inverse runs on device
+and every recursive multiply whose working set exceeds the budget
+re-enters the tagged Strassen scheduler, so a size "fits on device" only
+if its dense-inverse working set (operand + result) does, and the table
+deliberately includes sizes that do not.
+
+Full run (hours at the large sizes on CPU hosts):
+
+    PYTHONPATH=src python benchmarks/spin_scaling.py \
+        [--sizes 1024,2048,4096] [--budget-mb 16] [--store memmap]
+
+Every size is steady-state: one full untimed warmup run pays the leaf
+jit compiles and the autotuner's calibration micro-benchmarks before the
+timed run starts. Rows carry parity against the dense device
+``jnp.linalg.inv`` up to ``--parity-max``.
+
+CI smoke mode — f32, an artificially small budget that forces the
+nested multiplies through multiple staging waves, a 1e-5 parity gate,
+and the budget/pipeline gates:
+
+    PYTHONPATH=src python benchmarks/spin_scaling.py --smoke
+
+``--smoke`` EXITS NON-ZERO if any size drifts beyond the tolerance from
+the dense inverse, if the sweep never needed a nested out-of-core
+multiply, if the nested multiplies never ran >= 2 staging waves, if no
+size exceeded the device budget, or if ``peak_device_bytes`` exceeds
+the budget. ``--fault-rate`` adds a seeded chaos run per size gated
+bit-identical against the fault-free run with zero unrecovered faults.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)  # `benchmarks` package when run as a script
+
+import argparse
+import json
+import time
+
+
+def _spd(rng, n, np_dtype):
+    """Well-conditioned SPD input: every leading principal block
+    invertible, which the SPIN recursion requires."""
+    import numpy as np
+
+    g = rng.standard_normal((n, n)).astype(np.float32)
+    return (g @ g.T / n + np.eye(n, dtype=np.float32) * 2.0).astype(np_dtype)
+
+
+def _dense_inverse_seconds(a, repeats: int = 2):
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(jnp.linalg.inv)
+    da = jnp.asarray(a)
+    out = jax.block_until_ready(fn(da))  # warmup/compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(da))
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def sweep(
+    sizes=(1024, 2048),
+    *,
+    budget_bytes=16 << 20,
+    dtype="float32",
+    store="dict",
+    depth=None,
+    parity_max=4096,
+    fault_rate=0.0,
+    chaos_seed=0,
+    out_path="spin_scaling.json",
+):
+    """Run the inversion wall-clock-vs-size table; returns the payload.
+
+    ``depth=None`` lets each size pick the shallowest solver depth whose
+    dense leaf inverse fits the budget. ``fault_rate`` > 0 adds an
+    (untimed) chaos run per size: the nested out-of-core multiplies see
+    seeded block drops/corruption/leaf failures while lineage recovery
+    heals them; the row's ``chaos`` record carries the counters and a
+    ``bit_exact`` flag against the fault-free timed run.
+    """
+    import numpy as np
+
+    from benchmarks.common import emit
+    from repro.blocks.recovery import ChaosConfig
+    from repro.blocks.solve import spin_inverse_oot
+
+    if dtype == "bfloat16":
+        import ml_dtypes
+
+        np_dtype = np.dtype(ml_dtypes.bfloat16)
+        tol = 1e-2
+    else:
+        np_dtype = np.dtype(dtype)
+        tol = 1e-5
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in sizes:
+        a = _spd(rng, n, np_dtype)
+        item = np.result_type(np_dtype, np.float32).itemsize
+        # "Fits on device" the way the dense inverse needs it: operand
+        # plus result resident at once.
+        fits = 2 * n * n * item <= budget_bytes
+        kwargs = dict(
+            depth=depth, budget_bytes=budget_bytes, store=store,
+        )
+        # Untimed warmup: leaf jit compiles and calibration land here.
+        spin_inverse_oot(a, **kwargs)
+        out, stats = spin_inverse_oot(a, **kwargs)
+        row = {
+            "n": n,
+            "dtype": np_dtype.name,
+            "depth": stats.depth,
+            "oot_runs": stats.oot_runs,
+            "leaves": stats.leaves,
+            "waves": stats.waves,
+            "fits_on_device": fits,
+            "budget_bytes": budget_bytes,
+            "peak_device_bytes": stats.peak_device_bytes,
+            "operand_bytes": a.nbytes,
+            "inv_s": stats.total_s,
+            "leaf_s": stats.leaf_s,
+            "h2d_bytes": stats.h2d_bytes,
+            "d2h_bytes": stats.d2h_bytes,
+            "overlap_efficiency": stats.overlap_efficiency,
+            "dense_s": None,
+            "rel_err": None,
+            "ok": None,
+            "chaos": None,
+        }
+        if fault_rate > 0:
+            chaos = ChaosConfig(
+                drop=fault_rate,
+                corrupt=fault_rate * 0.4,
+                leaf_fail_rate=fault_rate * 0.5,
+                seed=chaos_seed,
+            )
+            out_chaos, stats_chaos = spin_inverse_oot(a, chaos=chaos, **kwargs)
+            row["chaos"] = {
+                "drop": chaos.drop,
+                "corrupt": chaos.corrupt,
+                "leaf_fail_rate": chaos.leaf_fail_rate,
+                "seed": chaos.seed,
+                "injected_faults": stats_chaos.injected_faults,
+                "lost_blocks": stats_chaos.lost_blocks,
+                "corrupt_blocks": stats_chaos.corrupt_blocks,
+                "recovered_blocks": stats_chaos.recovered_blocks,
+                "leaf_retries": stats_chaos.leaf_retries,
+                "unrecovered_faults": stats_chaos.unrecovered_faults,
+                "rung": stats_chaos.rung,
+                "degrades": stats_chaos.degrades,
+                "peak_device_bytes": stats_chaos.peak_device_bytes,
+                "bit_exact": bool(
+                    np.array_equal(
+                        np.asarray(out, np.float32),
+                        np.asarray(out_chaos, np.float32),
+                    )
+                ),
+            }
+        if n <= parity_max:
+            want, dense_s = _dense_inverse_seconds(a)
+            want = np.asarray(want).astype(np.float32)
+            scale = float(np.abs(want).max()) or 1.0
+            err = float(np.abs(out.astype(np.float32) - want).max() / scale)
+            row["dense_s"] = dense_s
+            row["rel_err"] = err
+            row["ok"] = err < tol
+        rows.append(row)
+        emit(
+            f"spin/{np_dtype.name}/n{n}", stats.total_s,
+            f"depth={stats.depth};muls={stats.oot_runs};waves={stats.waves};"
+            f"fits={fits};"
+            f"err={row['rel_err'] if row['rel_err'] is not None else 'n/a'}",
+        )
+
+    payload = {
+        "budget_bytes": budget_bytes,
+        "dtype": np_dtype.name,
+        "store": store,
+        "tolerance": tol,
+        "fault_rate": fault_rate,
+        "chaos_seed": chaos_seed,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out_path}", flush=True)
+    return payload
+
+
+def run():
+    """benchmarks.run entry point: a small f32 table with parity checks."""
+    sweep(sizes=(256, 384), budget_bytes=128 << 10, out_path="spin_scaling.json")
+
+
+# Smoke-mode constants: f32 sizes small enough for a CI runner; the
+# budget (i) is smaller than the 256^2 f32 dense-inverse working set
+# (2 * 262144 B) — so the largest size cannot invert on device — and
+# (ii) forces the nested multiplies through multi-wave staging.
+SMOKE_SIZES = (192, 256)
+SMOKE_BUDGET = 96 << 10
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="1024,2048,4096")
+    ap.add_argument("--budget-mb", type=float, default=16.0)
+    ap.add_argument("--dtype", choices=["float32", "bfloat16"], default="float32")
+    ap.add_argument("--store", choices=["dict", "arena", "memmap"], default="dict")
+    ap.add_argument("--depth", type=int, default=0,
+                    help="0 = shallowest depth whose leaf fits the budget")
+    ap.add_argument("--parity-max", type=int, default=4096,
+                    help="largest n to verify against the dense inverse")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny f32 sizes under a budget that "
+                         "forces out-of-core multiplies; non-zero exit on "
+                         "parity drift > 1e-5 or a degenerate plan")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: per-get drop probability in the "
+                         "nested multiplies (corruption and leaf-failure "
+                         "rates derive from it); adds a recovery run per "
+                         "size gated bit-exact against the fault-free run")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--out", default="spin_scaling.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace of the sweep here")
+    args = ap.parse_args()
+
+    if args.trace_out:
+        from repro import obs
+
+        obs.configure(enabled=True)
+
+    if args.smoke:
+        payload = sweep(
+            SMOKE_SIZES, budget_bytes=SMOKE_BUDGET, dtype=args.dtype,
+            store=args.store, parity_max=max(SMOKE_SIZES),
+            fault_rate=args.fault_rate, chaos_seed=args.chaos_seed,
+            out_path=args.out,
+        )
+    else:
+        payload = sweep(
+            tuple(int(s) for s in args.sizes.split(",")),
+            budget_bytes=int(args.budget_mb * 2**20), dtype=args.dtype,
+            store=args.store, depth=args.depth or None,
+            parity_max=args.parity_max,
+            fault_rate=args.fault_rate, chaos_seed=args.chaos_seed,
+            out_path=args.out,
+        )
+
+    print(f"# {'n':>7} {'depth':>5} {'muls':>5} {'waves':>5} {'fits':>5} "
+          f"{'inv_s':>9} {'dense_s':>9} {'rel_err':>9}")
+    for r in payload["rows"]:
+        dense = f"{r['dense_s']:.4f}" if r["dense_s"] is not None else "-"
+        err = f"{r['rel_err']:.2e}" if r["rel_err"] is not None else "-"
+        print(f"# {r['n']:>7} {r['depth']:>5} {r['oot_runs']:>5} "
+              f"{r['waves']:>5} {str(r['fits_on_device']):>5} "
+              f"{r['inv_s']:>9.4f} {dense:>9} {err:>9}")
+
+    if args.trace_out:
+        # Written before the smoke gates so a failing run still uploads
+        # its trace as a CI artifact.
+        from repro import obs
+        from repro.obs import export
+
+        export.write_trace(args.trace_out, metrics=obs.get_metrics())
+        print(f"# wrote {args.trace_out} "
+              f"({len(obs.get_tracer().spans)} spans)", flush=True)
+
+    if args.smoke:
+        bad = [r for r in payload["rows"] if r["ok"] is False]
+        if bad:
+            print(f"# SMOKE FAIL: parity drift beyond {payload['tolerance']}: "
+                  f"{[(r['n'], r['rel_err']) for r in bad]}")
+            sys.exit(1)
+        if not any(r["oot_runs"] > 0 for r in payload["rows"]):
+            print("# SMOKE FAIL: no nested multiply re-entered the "
+                  "out-of-core scheduler")
+            sys.exit(1)
+        if all(r["waves"] < 2 for r in payload["rows"]):
+            print("# SMOKE FAIL: nested multiplies never ran >= 2 "
+                  "staging waves")
+            sys.exit(1)
+        if not any(not r["fits_on_device"] for r in payload["rows"]):
+            print("# SMOKE FAIL: no size exceeded the device budget")
+            sys.exit(1)
+        over = [
+            r for r in payload["rows"]
+            if r["peak_device_bytes"] > r["budget_bytes"]
+        ]
+        if over:
+            print(f"# SMOKE FAIL: peak device bytes exceeded the budget: "
+                  f"{[(r['n'], r['peak_device_bytes']) for r in over]}")
+            sys.exit(1)
+        top = payload["rows"][-1]
+        print(f"# smoke ok: n={top['n']} inverted via {top['oot_runs']} "
+              f"nested out-of-core multiplies ({top['waves']} waves) under "
+              f"a {payload['budget_bytes']} B budget "
+              f"(dense working set {2 * top['operand_bytes']} B)")
+
+    if args.fault_rate > 0:
+        # Chaos gates (independent of --smoke): every chaos run must heal
+        # to a bit-identical result with zero unrecovered faults, under
+        # budget, and the harness must actually have exercised recovery.
+        chaos_rows = [r for r in payload["rows"] if r["chaos"] is not None]
+        inexact = [r["n"] for r in chaos_rows if not r["chaos"]["bit_exact"]]
+        if inexact:
+            print(f"# CHAOS FAIL: recovered result not bit-identical: {inexact}")
+            sys.exit(1)
+        unrec = [
+            (r["n"], r["chaos"]["unrecovered_faults"])
+            for r in chaos_rows if r["chaos"]["unrecovered_faults"]
+        ]
+        if unrec:
+            print(f"# CHAOS FAIL: unrecovered faults: {unrec}")
+            sys.exit(1)
+        recovered = sum(r["chaos"]["recovered_blocks"] for r in chaos_rows)
+        retries = sum(r["chaos"]["leaf_retries"] for r in chaos_rows)
+        if not recovered or not retries:
+            print(f"# CHAOS FAIL: harness under-exercised "
+                  f"(recovered={recovered}, retries={retries})")
+            sys.exit(1)
+        over = [
+            r["n"] for r in chaos_rows
+            if r["chaos"]["peak_device_bytes"] > r["budget_bytes"]
+        ]
+        if over:
+            print(f"# CHAOS FAIL: chaos run exceeded the device budget: {over}")
+            sys.exit(1)
+        injected = sum(r["chaos"]["injected_faults"] for r in chaos_rows)
+        print(f"# chaos ok: {injected} faults injected across "
+              f"{len(chaos_rows)} sizes; {recovered} blocks recomputed from "
+              f"lineage, {retries} leaf retries, 0 unrecovered, all results "
+              f"bit-identical to the fault-free runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,11 +6,19 @@ re-expressed for a single-host JAX runtime whose device memory is the
 scarce resource:
 
   tags         — the base-7 (M-index) / base-4 (quadrant) tag-path codec
-                 and the full divide/combine tag algebra.
+                 (delegating the schema algebra to the plan layer).
+  plan         — declarative RecursivePlans: divide schema, leaf op,
+                 combine schema. Strassen/winograd/naive8 matmul plans
+                 (bit-identical Scheme wrappers) plus SPIN inversion and
+                 triangular-solve dataflow plans.
   blockmatrix  — (row, col, tag)-addressed blocks over a pluggable host
                  store (dict, preallocated RAM arena, npy/memmap spill).
-  scheduler    — a level-order Strassen executor that stages the 7^q leaf
-                 multiplies through device memory in budgeted waves.
+  scheduler    — a level-order wave executor that walks a BilinearPlan,
+                 staging the rank^q leaf ops through device memory in
+                 budgeted waves.
+  solve        — the sequential DataflowPlan executor: SPIN
+                 block-recursive inversion / triangular solves whose
+                 multiplies re-enter the wave scheduler.
   recovery     — lineage-based fault tolerance: the tag algebra IS the
                  lineage graph, so any lost/corrupt block recomputes from
                  its parents (RecoveringStore), with a deterministic
@@ -41,17 +49,47 @@ from repro.blocks.recovery import (
     RecoveringStore,
     recompute_block,
 )
+from repro.blocks.plan import (
+    BilinearPlan,
+    DataflowPlan,
+    RecursivePlan,
+    as_bilinear_plan,
+    get_plan,
+    matmul_plan,
+    plan_names,
+    register_plan,
+)
 from repro.blocks.scheduler import (
     OotStats,
+    PlanScheduler,
     StrassenScheduler,
     leaf_bytes,
     min_depth_for_budget,
     strassen_oot_matmul,
 )
+from repro.blocks.solve import (
+    SolveScheduler,
+    solver_min_depth_for_budget,
+    spin_inverse_oot,
+    triangular_solve_oot,
+)
 from repro.blocks import tags
 
 __all__ = [
     "tags",
+    "RecursivePlan",
+    "BilinearPlan",
+    "DataflowPlan",
+    "matmul_plan",
+    "register_plan",
+    "get_plan",
+    "plan_names",
+    "as_bilinear_plan",
+    "PlanScheduler",
+    "SolveScheduler",
+    "solver_min_depth_for_budget",
+    "spin_inverse_oot",
+    "triangular_solve_oot",
     "BlockStore",
     "DictStore",
     "ArenaStore",

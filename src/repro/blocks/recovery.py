@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.blocks import tags
 from repro.blocks.blockmatrix import BlockKey, BlockStore, signed_block_sum
+from repro.blocks.plan import BilinearPlan, matmul_plan
 from repro.core.coefficients import Scheme, get_scheme
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracer as obs_tracer
@@ -249,21 +250,40 @@ class Lineage:
     acc_dtype: np.dtype
     stage_dtype: np.dtype
     leaf_matmul: Optional[Callable[[np.ndarray, np.ndarray], np.ndarray]] = None
+    # The recursive plan whose schemas key the recompute derivations.
+    # ``None`` (the historical scheme-keyed construction) means the
+    # scheme's matmul plan — so lineage built before the plan layer, or
+    # by callers that only know a scheme, replays identically.
+    plan: Optional[BilinearPlan] = None
+
+    def get_plan(self) -> BilinearPlan:
+        if self.plan is None:
+            # Cache on the (non-frozen) dataclass: recompute chains call
+            # this per derivation step.
+            object.__setattr__(self, "plan", matmul_plan(self.scheme))
+        return self.plan
 
     def geometry(self, op: str) -> Tuple[int, int, int, int, np.ndarray]:
         """(root rows, root cols, block rows, block cols, dense-or-None)."""
-        if op == "A":
+        plan = self.get_plan()
+        a_name, b_name = plan.operands
+        if op == a_name:
             return self.pm, self.pk, self.bam, self.bak, self.a
-        if op == "B":
+        if op == b_name:
             return self.pk, self.pn, self.bak, self.bbn, self.b
-        if op == "C":
+        if op == plan.result:
             return self.pm, self.pn, self.bam, self.bbn, None
         raise BlockLossError(f"tag operand {op!r} is not lineage-addressable")
 
 
-def _parse_tag(tag: str) -> Tuple[str, tags.TagPath]:
+def _parse_tag(
+    tag: str, plan: Optional[BilinearPlan] = None
+) -> Tuple[str, tags.TagPath]:
+    names = (
+        plan.operands + (plan.result,) if plan is not None else ("A", "B", "C")
+    )
     op, sep, path_s = tag.partition(":")
-    if not sep or op not in ("A", "B", "C"):
+    if not sep or op not in names:
         raise BlockLossError(f"tag {tag!r} is not a lineage-addressable node tag")
     try:
         return op, tags.from_string(path_s)
@@ -307,15 +327,17 @@ def recompute_block(
     """
     if _depth > 2 * lineage.depth + 8:
         raise BlockLossError(f"lineage recursion too deep recomputing {key}")
+    plan = lineage.get_plan()
+    a_name, b_name = plan.operands
     i, j, tag = key
-    op, path = _parse_tag(tag)
+    op, path = _parse_tag(tag, plan)
     level = len(path)
     rows, cols, bm, bn, dense = lineage.geometry(op)
     gr, gc = (rows >> level) // bm, (cols >> level) // bn
     if not (0 <= i < gr and 0 <= j < gc):
         raise BlockLossError(f"{key} outside the level-{level} grid {(gr, gc)}")
 
-    if op in ("A", "B"):
+    if op in (a_name, b_name):
         if level == 0:
             # Root re-ingest: the same slice/zero-pad/cast as from_dense.
             chunk = dense[i * bm : (i + 1) * bm, j * bn : (j + 1) * bn]
@@ -325,13 +347,12 @@ def recompute_block(
                 chunk = full
             return np.ascontiguousarray(np.asarray(chunk, dense.dtype))
         # One divide level: the single-digit operand_terms row is exactly
-        # the a/b coefficient row _divide_child applied; parent blocks are
-        # read through fetch (recovering recursively if they are gone too).
+        # the plan's divide-coefficient row _divide_child applied; parent
+        # blocks are read through fetch (recovering recursively if they
+        # are gone too).
         parent_tag = f"{op}:{tags.to_string(path[:-1])}"
         row = np.zeros(tags.Q_BASE)
-        for (q,), c in tags.operand_terms(
-            (path[-1],), lineage.scheme, "a" if op == "A" else "b"
-        ):
+        for (q,), c in plan.operand_terms((path[-1],), op):
             row[q] = c
         acc = signed_block_sum(
             lambda q: fetch(((q // 2) * gr + i, (q % 2) * gc + j, parent_tag)),
@@ -342,7 +363,7 @@ def recompute_block(
             np.asarray(acc.astype(lineage.acc_dtype), lineage.acc_dtype)
         )
 
-    # op == "C"
+    # op == the plan's result
     if level == lineage.depth:
         # Leaf product: re-run the leaf multiply over recomputed operands,
         # through the same staging cast and backend the wave used.
@@ -350,10 +371,10 @@ def recompute_block(
             raise BlockLossError(
                 f"cannot recompute leaf product {key}: lineage has no leaf_matmul"
             )
-        a_host = _node_dense("A", path, lineage, fetch).astype(
+        a_host = _node_dense(a_name, path, lineage, fetch).astype(
             lineage.stage_dtype, copy=False
         )
-        b_host = _node_dense("B", path, lineage, fetch).astype(
+        b_host = _node_dense(b_name, path, lineage, fetch).astype(
             lineage.stage_dtype, copy=False
         )
         host = np.asarray(lineage.leaf_matmul(a_host, b_host)).astype(
@@ -366,20 +387,20 @@ def recompute_block(
             )
         )
 
-    # Combine partial: one combine level over the seven child products.
-    # The block's quadrant inside the parent picks the c-coefficient row;
-    # the single-digit combine_terms expansion per child rebuilds it.
+    # Combine partial: one combine level over the rank child products.
+    # The block's quadrant inside the parent picks the combine-coefficient
+    # row; the single-digit combine_terms expansion per child rebuilds it.
     cgr, cgc = gr // 2, gc // 2
     kq = 2 * (i // cgr) + (j // cgc)
     ci, cj = i % cgr, j % cgc
-    rank = lineage.scheme.n_mults
+    rank = plan.rank
     row = np.zeros(rank)
     for p in range(rank):
-        for (q,), c in tags.combine_terms((p,), lineage.scheme):
+        for (q,), c in plan.combine_terms((p,)):
             if q == kq:
                 row[p] = c
     child_tags = [
-        f"C:{tags.to_string(tags.child(path, p, rank))}" for p in range(rank)
+        f"{op}:{tags.to_string(tags.child(path, p, rank))}" for p in range(rank)
     ]
     acc = signed_block_sum(
         lambda p: fetch((ci, cj, child_tags[p])), row, lineage.acc_dtype

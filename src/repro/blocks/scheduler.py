@@ -53,6 +53,7 @@ from repro.blocks.blockmatrix import (
     make_store,
     signed_block_sum,
 )
+from repro.blocks.plan import BilinearPlan, as_bilinear_plan
 from repro.blocks.recovery import (
     ChaosConfig,
     ChaosStore,
@@ -61,13 +62,14 @@ from repro.blocks.recovery import (
     Lineage,
     RecoveringStore,
 )
-from repro.core.coefficients import Scheme, get_scheme
+from repro.core.coefficients import Scheme
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracer as obs_tracer
 
 __all__ = [
     "OotStats",
     "OotStatsRing",
+    "PlanScheduler",
     "StrassenScheduler",
     "strassen_oot_matmul",
     "leaf_bytes",
@@ -190,6 +192,12 @@ class OotStats:
     budget_bytes: int
     per_leaf_bytes: int
     peak_device_bytes: int
+    # The plan's operator ("matmul" | "inverse" | "solve"): rings mix runs
+    # from every recursive plan, so consumers filter/attribute by op.
+    op: str = "matmul"
+    # Nested out-of-core multiplies a solver run spawned (0 for matmul
+    # runs — the scheduler itself never nests).
+    oot_runs: int = 0
     h2d_bytes: int = 0
     d2h_bytes: int = 0
     host_store_peak_bytes: int = 0
@@ -360,14 +368,24 @@ class _RunTrackingStore(BlockStore):
         pass
 
 
-class StrassenScheduler:
-    """Budgeted level-order Strassen over a host-resident block store.
+class PlanScheduler:
+    """Budgeted level-order executor for one bilinear recursive plan.
+
+    The waves/budget/pipeline/degradation machinery below is operator
+    agnostic: divide rows, combine rows, rank, tag prefixes, and the op
+    label all come from a :class:`repro.blocks.plan.BilinearPlan`. The
+    Strassen base-7 and naive base-4 multiplies are simply the first two
+    registered plans (wrapping the coefficient tables unchanged, so this
+    executor is bit-identical to the pre-plan Strassen scheduler).
 
     Args:
-      depth: recursion depth q (7^q leaves). Must make a leaf fit the
+      depth: recursion depth q (rank^q leaves). Must make a leaf fit the
         budget — see :func:`min_depth_for_budget`.
       budget_bytes: peak device bytes the leaf waves may occupy.
-      scheme: coefficient scheme (strassen | winograd | naive8).
+      scheme: coefficient scheme (strassen | winograd | naive8) — the
+        historical spelling of ``plan`` for matmul plans.
+      plan: the :class:`~repro.blocks.plan.BilinearPlan` to walk (or its
+        registry name). Overrides ``scheme`` when given.
       backend: :class:`repro.core.backend.MatmulBackend` routing for the
         leaf multiplies; defaults to ``kind="auto"`` so each leaf shape
         goes through the calibrated dispatcher (and, transitively, any
@@ -415,6 +433,7 @@ class StrassenScheduler:
         depth: int,
         budget_bytes: int,
         scheme: Scheme | str = "strassen",
+        plan: "BilinearPlan | str | None" = None,
         backend=None,
         block: Optional[int] = None,
         prefetch: bool = True,
@@ -426,14 +445,22 @@ class StrassenScheduler:
         degrade: bool = True,
     ) -> None:
         if depth < 1:
-            raise ValueError("out-of-core Strassen needs depth >= 1")
+            raise ValueError("out-of-core recursion needs depth >= 1")
         if budget_bytes <= 0:
             raise ValueError("budget_bytes must be positive")
         if retries < 0 or retry_backoff_s < 0:
             raise ValueError("retries and retry_backoff_s must be >= 0")
         self.depth = depth
         self.budget_bytes = int(budget_bytes)
-        self.scheme = get_scheme(scheme) if isinstance(scheme, str) else scheme
+        self.plan = as_bilinear_plan(plan if plan is not None else scheme)
+        if self.plan.leaf_kind != "matmul":
+            raise ValueError(
+                f"plan {self.plan.name!r} has leaf kind "
+                f"{self.plan.leaf_kind!r}; the wave scheduler executes "
+                f"matmul-leaf bilinear plans (dataflow plans run on "
+                f"repro.blocks.solve)"
+            )
+        self.scheme = self.plan.scheme
         self.block = block
         self.prefetch = prefetch
         self.stage_dtype = stage_dtype
@@ -504,6 +531,7 @@ class StrassenScheduler:
                     raise
                 stats.leaf_retries += 1
                 mx.counter("fault.retries").inc()
+                mx.counter(f"fault.retries.{self.plan.op}").inc()
                 if delay > 0:
                     time.sleep(delay)
                 delay = min(delay * 2, 2.0)
@@ -533,7 +561,7 @@ class StrassenScheduler:
     ) -> None:
         """parent quadrants = sum_p c_coef[k, p] * child_p, block-streamed."""
         gr, gc = children[0].grid
-        c_coef = self.scheme.c_coef
+        c_coef = self.plan.combine_coef
         for kq in range(tags.Q_BASE):
             for i in range(gr):
                 for j in range(gc):
@@ -614,8 +642,9 @@ class StrassenScheduler:
                     raise
                 nxt = rungs[idx + 1][0]
                 mx.counter("fault.degrade").inc()
+                mx.counter(f"fault.degrade.{self.plan.op}").inc()
                 tr.event(
-                    "fault.degrade", cat="fault",
+                    "fault.degrade", cat="fault", op=self.plan.op,
                     rung_from=name, rung_to=nxt, cause=type(e).__name__,
                 )
                 degrade_log.append(
@@ -662,7 +691,13 @@ class StrassenScheduler:
         acc_dtype = np.result_type(dtype, np.float32)
         m, k = a.shape
         n = b.shape[1]
-        rank = self.scheme.n_mults
+        rank = self.plan.rank
+        # Tag prefixes come from the plan ("A"/"B"/"C" for matmul plans,
+        # so lineage keys and traces are unchanged from the pre-plan era).
+        a_name, b_name = self.plan.operands
+        c_name = self.plan.result
+        a_rows = self.plan.divide_coef[a_name]
+        b_rows = self.plan.divide_coef[b_name]
 
         # Recursion-aligned padded dims and the block partition. With an
         # explicit block grain each leaf dim rounds up to a whole number of
@@ -763,7 +798,7 @@ class StrassenScheduler:
                 return np.asarray(jax.block_until_ready(self._leaf_matmul(a_dev, b_dev)))
 
             lineage = Lineage(
-                scheme=self.scheme, depth=depth, a=a, b=b,
+                scheme=self.scheme, plan=self.plan, depth=depth, a=a, b=b,
                 pm=pm, pk=pk, pn=pn, bam=bam, bak=bak, bbn=bbn,
                 acc_dtype=np.dtype(acc_dtype), stage_dtype=stage_dtype,
                 leaf_matmul=lineage_leaf,
@@ -772,7 +807,7 @@ class StrassenScheduler:
             inner = recovering
         store = inner
         root_span = tr.begin(
-            "oot.matmul", cat="oot",
+            f"oot.{self.plan.op}", cat="oot", op=self.plan.op,
             m=m, k=k, n=n, depth=depth, scheme=self.scheme.name,
             budget_bytes=self.budget_bytes,
         )
@@ -786,6 +821,7 @@ class StrassenScheduler:
             leaves = rank**depth
             stats = OotStats(
                 m=m, k=k, n=n, depth=depth, scheme=self.scheme.name,
+                op=self.plan.op,
                 leaves=leaves, waves=0, wave_size=wave_size, prefetch=prefetch,
                 stage_dtype=stage_dtype.name,
                 budget_bytes=self.budget_bytes, per_leaf_bytes=per_leaf,
@@ -794,10 +830,10 @@ class StrassenScheduler:
 
             # --- ingest roots (edge/odd dims zero-extend to the padded grain).
             a_root = BlockMatrix.from_dense(
-                a, (bam, bak), store, self._node_tag("A", ()), shape=(pm, pk)
+                a, (bam, bak), store, self._node_tag(a_name, ()), shape=(pm, pk)
             )
             b_root = BlockMatrix.from_dense(
-                b, (bak, bbn), store, self._node_tag("B", ()), shape=(pk, pn)
+                b, (bak, bbn), store, self._node_tag(b_name, ()), shape=(pk, pn)
             )
 
             # --- divide: level-order, all rank^level nodes per level. One
@@ -816,26 +852,22 @@ class StrassenScheduler:
                             tag=tags.to_string(path), level=level,
                         ):
                             pa = self._node(
-                                store, "A", path, (pm, pk), (bam, bak), p_dtype
+                                store, a_name, path, (pm, pk), (bam, bak), p_dtype
                             )
                             pb = self._node(
-                                store, "B", path, (pk, pn), (bak, bbn), p_dtype
+                                store, b_name, path, (pk, pn), (bak, bbn), p_dtype
                             )
                             for p in range(rank):
                                 ca = self._node(
-                                    store, "A", tags.child(path, p, rank), (pm, pk),
-                                    (bam, bak), acc_dtype,
+                                    store, a_name, tags.child(path, p, rank),
+                                    (pm, pk), (bam, bak), acc_dtype,
                                 )
                                 cb = self._node(
-                                    store, "B", tags.child(path, p, rank), (pk, pn),
-                                    (bak, bbn), acc_dtype,
+                                    store, b_name, tags.child(path, p, rank),
+                                    (pk, pn), (bak, bbn), acc_dtype,
                                 )
-                                self._divide_child(
-                                    pa, ca, self.scheme.a_coef[p], acc_dtype
-                                )
-                                self._divide_child(
-                                    pb, cb, self.scheme.b_coef[p], acc_dtype
-                                )
+                                self._divide_child(pa, ca, a_rows[p], acc_dtype)
+                                self._divide_child(pb, cb, b_rows[p], acc_dtype)
                     stats.host_store_peak_bytes = max(
                         stats.host_store_peak_bytes, store.nbytes()
                     )
@@ -844,10 +876,10 @@ class StrassenScheduler:
                     # (O(blocks-of-node)), not delete_tag's full-store scan.
                     for path in tags.leaf_paths(level, rank):
                         self._node(
-                            store, "A", path, (pm, pk), (bam, bak), p_dtype
+                            store, a_name, path, (pm, pk), (bam, bak), p_dtype
                         ).free()
                         self._node(
-                            store, "B", path, (pk, pn), (bak, bbn), p_dtype
+                            store, b_name, path, (pk, pn), (bak, bbn), p_dtype
                         ).free()
             tr.end(div_span)
             stats.divide_s = div_span.duration
@@ -893,10 +925,10 @@ class StrassenScheduler:
                         track="oot.stage", wave=w_idx, h2d_bytes=in_bytes,
                     ):
                         na = self._node(
-                            store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                            store, a_name, path, (pm, pk), (bam, bak), acc_dtype
                         )
                         nb = self._node(
-                            store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                            store, b_name, path, (pk, pn), (bak, bbn), acc_dtype
                         )
                         # Any rounding to a narrower staging dtype happens
                         # here, at the host->device boundary — never mid-chain.
@@ -983,15 +1015,18 @@ class StrassenScheduler:
                                 pass
                             stats.leaf_retries += 1
                             mx.counter("fault.retries").inc()
+                            mx.counter(f"fault.retries.{self.plan.op}").inc()
 
                             def redo(path=path):
                                 if flaky is not None:
                                     flaky.check()
                                 na = self._node(
-                                    store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                                    store, a_name, path,
+                                    (pm, pk), (bam, bak), acc_dtype,
                                 )
                                 nb = self._node(
-                                    store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                                    store, b_name, path,
+                                    (pk, pn), (bak, bbn), acc_dtype,
                                 )
                                 a_dev = jax.device_put(
                                     na.to_dense().astype(stage_dtype, copy=False)
@@ -1011,7 +1046,7 @@ class StrassenScheduler:
                         lsp.set(d2h_bytes=host.nbytes)
                         host = host.astype(acc_dtype, copy=False)
                         cn = self._node(
-                            store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                            store, c_name, path, (pm, pn), (bam, bbn), acc_dtype
                         )
                         for i in range(cn.grid[0]):
                             for j in range(cn.grid[1]):
@@ -1023,10 +1058,10 @@ class StrassenScheduler:
                                     ],
                                 )
                         self._node(
-                            store, "A", path, (pm, pk), (bam, bak), acc_dtype
+                            store, a_name, path, (pm, pk), (bam, bak), acc_dtype
                         ).free()
                         self._node(
-                            store, "B", path, (pk, pn), (bak, bbn), acc_dtype
+                            store, b_name, path, (pk, pn), (bak, bbn), acc_dtype
                         ).free()
                 # Drop the wave's device references (operands were consumed
                 # by the leaf multiplies; products are now on host) so the
@@ -1122,13 +1157,13 @@ class StrassenScheduler:
                         ):
                             children = [
                                 self._node(
-                                    store, "C", tags.child(path, p, rank),
+                                    store, c_name, tags.child(path, p, rank),
                                     (pm, pn), (bam, bbn), acc_dtype,
                                 )
                                 for p in range(rank)
                             ]
                             parent = self._node(
-                                store, "C", path, (pm, pn), (bam, bbn), acc_dtype
+                                store, c_name, path, (pm, pn), (bam, bbn), acc_dtype
                             )
                             self._combine_parent(children, parent, acc_dtype)
                             for child in children:
@@ -1139,7 +1174,7 @@ class StrassenScheduler:
             tr.end(comb_span)
             stats.combine_s = comb_span.duration
 
-            c_root = self._node(store, "C", (), (pm, pn), (bam, bbn), acc_dtype)
+            c_root = self._node(store, c_name, (), (pm, pn), (bam, bbn), acc_dtype)
             result = c_root.to_dense()[:m, :n].astype(dtype, copy=False)
             a_root.free()
             b_root.free()
@@ -1196,6 +1231,11 @@ class StrassenScheduler:
         return result, stats
 
 
+# The historical name: Strassen is now simply the first registered plan
+# this executor walks. Kept as the public spelling used across the repo.
+StrassenScheduler = PlanScheduler
+
+
 def strassen_oot_matmul(
     a: np.ndarray,
     b: np.ndarray,
@@ -1203,6 +1243,7 @@ def strassen_oot_matmul(
     depth: int,
     budget_bytes: int,
     scheme: Scheme | str = "strassen",
+    plan: "BilinearPlan | str | None" = None,
     backend=None,
     block: Optional[int] = None,
     prefetch: bool = True,
@@ -1222,8 +1263,8 @@ def strassen_oot_matmul(
     ``strassen_oot`` candidate family, ``launch/blocks_demo.py``, and
     ``benchmarks/fig8_scaling.py`` share.
     """
-    sched = StrassenScheduler(
-        depth=depth, budget_bytes=budget_bytes, scheme=scheme,
+    sched = PlanScheduler(
+        depth=depth, budget_bytes=budget_bytes, scheme=scheme, plan=plan,
         backend=backend, block=block, prefetch=prefetch, stage_dtype=stage_dtype,
         chaos=chaos, recovery=recovery, retries=retries,
         retry_backoff_s=retry_backoff_s, degrade=degrade,

@@ -15,13 +15,14 @@ recursion level) first, exactly the digit order of
 :func:`repro.core.coefficients.leaf_tag_path`; ``encode``/``decode`` are
 the generic-radix generalization of that function and its inverse.
 
-Beyond the codec, this module carries the *tag algebra* the out-of-core
-scheduler runs on: for a leaf M-path, which (quadrant-path, coefficient)
-terms of the root operands form its left/right operand
-(:func:`operand_terms`), and with which coefficient the leaf product lands
-in each quadrant path of C (:func:`combine_terms`). These are the closed
-forms of Stark's flatMapToPair/groupByKey divide and combine stages —
-products over levels of the scheme's a/b/c coefficients.
+The *tag algebra* the out-of-core scheduler runs on — for a leaf M-path,
+which (quadrant-path, coefficient) terms of the root operands form its
+left/right operand, and with which coefficient the leaf product lands in
+each quadrant path of C — lives in :mod:`repro.blocks.plan` now (it is a
+property of a recursive plan's divide/combine schemas, not of the tag
+codec). :func:`operand_terms` / :func:`combine_terms` remain here as thin
+wrappers over the scheme's matmul plan for the historical
+(scheme, side)-keyed API.
 """
 from __future__ import annotations
 
@@ -112,62 +113,44 @@ def leaf_paths(depth: int, base: int = M_BASE) -> Iterator[TagPath]:
 
 
 def _expand(m_path: TagPath, coef: np.ndarray) -> List[Term]:
-    """Tensor-product expansion of one operand side down a tag path."""
-    terms: List[Term] = [((), 1.0)]
-    for digit in m_path:
-        nxt: List[Term] = []
-        for q_path, c in terms:
-            for q in range(Q_BASE):
-                cq = float(coef[digit, q])
-                if cq != 0.0:
-                    nxt.append((q_path + (q,), c * cq))
-        terms = nxt
-    return terms
+    """Tensor-product expansion down a tag path (now plan-layer algebra)."""
+    from repro.blocks.plan import expand_terms
+
+    return expand_terms(m_path, coef, Q_BASE)
 
 
 def operand_terms(
     m_path: TagPath, scheme: Scheme | str, side: str
 ) -> List[Term]:
-    """The divide algebra: root-operand quadrant paths feeding a leaf.
+    """The divide algebra of a scheme's matmul plan, (scheme, side)-keyed.
 
-    For leaf M-path ``m_path`` of the given ``scheme``, returns the
-    (base-4 quadrant path, coefficient) terms such that the leaf's
-    ``side`` operand ('a' or 'b') equals the signed sum of the root
-    operand's blocks at those quadrant paths — the closed form of running
-    Stark's divide stage ``len(m_path)`` times:
-
-        A_{m_path} = sum_t coeff_t * A[quadrant path t]
-
-    with ``coeff_t = prod_level a_coef[m_digit, q_digit]``.
+    For leaf M-path ``m_path``, returns the (base-4 quadrant path,
+    coefficient) terms such that the leaf's ``side`` operand ('a' or 'b')
+    equals the signed sum of the root operand's blocks at those quadrant
+    paths. Delegates to
+    :meth:`repro.blocks.plan.BilinearPlan.operand_terms` — the schemas
+    live on the plan; this keeps the historical scheme-keyed spelling.
     """
-    if isinstance(scheme, str):
-        scheme = get_scheme(scheme)
+    from repro.blocks.plan import matmul_plan
+
     if side == "a":
-        coef = scheme.a_coef
+        operand = "A"
     elif side == "b":
-        coef = scheme.b_coef
+        operand = "B"
     else:
         raise ValueError(f"side must be 'a' or 'b', got {side!r}")
-    if any(not 0 <= d < scheme.n_mults for d in m_path):
-        raise ValueError(f"{m_path} has digits outside rank {scheme.n_mults}")
-    return _expand(m_path, coef)
+    return matmul_plan(scheme).operand_terms(m_path, operand)
 
 
 def combine_terms(m_path: TagPath, scheme: Scheme | str) -> List[Term]:
-    """The combine algebra: where a leaf product lands in C.
+    """The combine algebra of a scheme's matmul plan: where a leaf lands.
 
-    Returns (base-4 quadrant path of C, coefficient) terms: the leaf
-    product M_{m_path} contributes ``coeff * M`` to C's block at each
-    quadrant path — the closed form of running Stark's combine stage
-    bottom-up, ``coeff = prod_level c_coef[q_digit, m_digit]``.
+    Returns (base-4 quadrant path of C, coefficient) terms. Delegates to
+    :meth:`repro.blocks.plan.BilinearPlan.combine_terms`.
     """
-    if isinstance(scheme, str):
-        scheme = get_scheme(scheme)
-    if any(not 0 <= d < scheme.n_mults for d in m_path):
-        raise ValueError(f"{m_path} has digits outside rank {scheme.n_mults}")
-    # Same tensor-product expansion as the operand sides, with the combine
-    # matrix transposed so rows index the M-digit: c_coef[k, digit].T
-    return _expand(m_path, scheme.c_coef.T)
+    from repro.blocks.plan import matmul_plan
+
+    return matmul_plan(scheme).combine_terms(m_path)
 
 
 def validate_algebra(scheme: Scheme | str, depth: int) -> None:

@@ -85,6 +85,9 @@ __all__ = [
     "measure_seconds",
     "execute",
     "autotune",
+    "autotune_solver",
+    "predict_solver_terms",
+    "predict_solver_seconds",
     "cache_key",
     "model_call_sites",
     "warm_for_model",
@@ -1090,6 +1093,207 @@ def autotune(
         res_span, cache_hit=False, kind=decision.kind,
         scheme=decision.scheme, depth=decision.depth, source=decision.source,
         predicted_s=decision.predicted_s, measured_s=decision.measured_s,
+        **{f"terms.{t}": v for t, v in terms.items()},
+    )
+    return decision
+
+
+# --------------------------------------------------------------------------
+# Solver families (SPIN block-recursive inversion / triangular solve)
+# --------------------------------------------------------------------------
+
+# Candidate families of the solver ops. Priced with the same calibrated
+# constants as the matmul families: t_flop for dense-leaf and recursive
+# multiply flops, t_h2d for every staged byte (with the wave pipeline's
+# overlap discount where the budget leaves pipeline headroom), t_elem for
+# the host-side axpy chains.
+INVERSE_OOT_KIND = "inverse_oot"
+SOLVE_OOT_KIND = "solve_oot"
+_SOLVER_FAMILIES = {"inverse": INVERSE_OOT_KIND, "solve": SOLVE_OOT_KIND}
+
+
+def predict_solver_terms(
+    op: str,
+    n: int,
+    depth: int,
+    calib: Calibration,
+    *,
+    nrhs: Optional[int] = None,
+    oot_budget: Optional[int] = None,
+    oot_overlap: bool = True,
+) -> Dict[str, float]:
+    """Per-constant cost decomposition of one solver run at a given depth.
+
+    The recursion does, per node at level i (2^i nodes, half-size h =
+    n / 2^(i+1)): for ``inverse`` six h-sized multiplies and two axpys
+    (SPIN's Schur-complement program); for ``solve`` one (h x h) @
+    (h x nrhs) multiply and one axpy. The 2^depth dense leaves run one
+    device inv (~2 s^3 flops) or trsm (~s^2 nrhs flops). Multiply staging
+    is priced at t_h2d with the wave pipeline's exposed-fraction discount
+    (:data:`OOT_OVERLAP_EXPOSED_FRACTION`) when ``oot_overlap``.
+    """
+    if op not in _SOLVER_FAMILIES:
+        raise ValueError(
+            f"unknown solver op {op!r}; have {sorted(_SOLVER_FAMILIES)}"
+        )
+    r = n if nrhs is None else nrhs
+    t_h2d = calib.t_h2d or calib.t_elem
+    flop_s = 0.0
+    h2d_elems = 0.0
+    elem_s = 0.0
+    s = max(1, n >> depth)
+    leaves = 1 << depth
+    if op == "inverse":
+        flop_s += leaves * 2.0 * s**3 * calib.t_flop
+        h2d_elems += leaves * 2.0 * s * s
+    else:
+        flop_s += leaves * float(s) * s * r * calib.t_flop
+        h2d_elems += leaves * (s * s + 2.0 * s * r)
+    mul_flop_s = 0.0
+    for level in range(depth):
+        nodes = 1 << level
+        h = max(1, n >> (level + 1))
+        if op == "inverse":
+            mul_flop_s += nodes * 6 * 2.0 * h**3 * calib.t_flop
+            h2d_elems += nodes * 6 * 3.0 * h * h
+            elem_s += nodes * 2.0 * h * h * calib.t_elem
+        else:
+            mul_flop_s += nodes * 2.0 * h * h * r * calib.t_flop
+            h2d_elems += nodes * (h * h + 2.0 * h * r)
+            elem_s += nodes * float(h) * r * calib.t_elem
+    flop_s += mul_flop_s
+    h2d_s = h2d_elems * t_h2d
+    if oot_overlap:
+        # The staged traffic rides the scheduler's async pipeline: only the
+        # non-overlappable remainder plus the fill/drain bubbles stay on
+        # the critical path (same shape as the strassen_oot discount).
+        h2d_s = max(h2d_s - mul_flop_s, 0.0) + OOT_OVERLAP_EXPOSED_FRACTION * min(
+            h2d_s, mul_flop_s
+        )
+    return {"flop_s": flop_s, "elem_s": elem_s, "h2d_s": h2d_s}
+
+
+def predict_solver_seconds(
+    op: str,
+    n: int,
+    depth: int,
+    calib: Calibration,
+    *,
+    nrhs: Optional[int] = None,
+    oot_budget: Optional[int] = None,
+    oot_overlap: bool = True,
+) -> float:
+    terms = predict_solver_terms(
+        op, n, depth, calib, nrhs=nrhs, oot_budget=oot_budget,
+        oot_overlap=oot_overlap,
+    )
+    return sum(terms.values())
+
+
+def autotune_solver(
+    op: str,
+    n: int,
+    dtype=jnp.float32,
+    *,
+    nrhs: Optional[int] = None,
+    oot_budget: Optional[int] = None,
+    max_depth: int = 10,
+    scheme: str = "strassen",
+    cache: Optional[TuningCache] = None,
+    calibration: Optional[Calibration] = None,
+    site: Optional[str] = None,
+    telemetry: Optional[Telemetry] = None,
+) -> Decision:
+    """Pick the predicted-fastest recursion depth for one solver shape.
+
+    ``op`` is 'inverse' or 'solve'. Candidate depths run from the
+    smallest whose dense leaf fits ``oot_budget`` (every level halves the
+    leaf side) up a few levels — deeper trades dense-leaf cubic work for
+    more recursive-multiply traffic, and the calibrated terms arbitrate.
+    Decisions cache and telemetry exactly like matmul resolutions, with
+    ``topo`` set to the solver family so a solver entry can never answer
+    a matmul lookup.
+    """
+    from repro.blocks.solve import solver_min_depth_for_budget
+
+    family = _SOLVER_FAMILIES.get(op)
+    if family is None:
+        raise ValueError(
+            f"unknown solver op {op!r}; have {sorted(_SOLVER_FAMILIES)}"
+        )
+    tel = telemetry if telemetry is not None else _TELEMETRY
+    tr = obs_tracer.get_tracer()
+    res_span = tr.begin(
+        "autotune.resolve", cat="autotune", site=site, family=family, n=n,
+    )
+    dev = jax.devices()[0]
+    leaf_kind = "inv" if op == "inverse" else "trsm_lower"
+    key = cache_key(
+        n, n, n if nrhs is None else nrhs, dtype,
+        device_kind=dev.platform, device_count=1,
+        schemes=(scheme,), min_dim=0, max_depth=max_depth,
+        topo=family, site=site, oot_budget=oot_budget,
+    )
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            decision = dataclasses.replace(hit, source="cache")
+            tel.record(
+                TelemetryEvent(
+                    key=key, site=site, kind=decision.kind,
+                    scheme=decision.scheme, depth=decision.depth,
+                    source="cache", cache_hit=True,
+                    predicted_s=decision.predicted_s,
+                    measured_s=decision.measured_s,
+                )
+            )
+            obs_metrics.get_metrics().counter("autotune.cache_hit").inc()
+            tr.end(
+                res_span, cache_hit=True, kind=decision.kind,
+                depth=decision.depth, source="cache",
+            )
+            return decision
+
+    calib = calibration or (cache.calibration if cache else None) or get_calibration()
+    if oot_budget:
+        d_min = solver_min_depth_for_budget(
+            n, oot_budget, dtype, nrhs=nrhs, leaf_kind=leaf_kind,
+            max_depth=max_depth,
+        )
+    else:
+        d_min = 0
+    depths = range(d_min, min(d_min + 3, max_depth) + 1)
+    best_depth = min(
+        depths,
+        key=lambda d: predict_solver_seconds(
+            op, n, d, calib, nrhs=nrhs, oot_budget=oot_budget
+        ),
+    )
+    predicted = predict_solver_seconds(
+        op, n, best_depth, calib, nrhs=nrhs, oot_budget=oot_budget
+    )
+    decision = Decision(
+        kind=family, scheme=scheme, depth=best_depth,
+        predicted_s=float(predicted), source="predicted",
+    )
+    if cache is not None:
+        cache.calibration = cache.calibration or calib
+        cache.put(key, decision)
+        cache.save()
+    terms = predict_solver_terms(
+        op, n, best_depth, calib, nrhs=nrhs, oot_budget=oot_budget
+    )
+    tel.record(
+        TelemetryEvent(
+            key=key, site=site, kind=family, scheme=scheme, depth=best_depth,
+            source="predicted", cache_hit=False,
+            predicted_s=decision.predicted_s, terms=terms,
+        )
+    )
+    obs_metrics.get_metrics().counter("autotune.cache_miss").inc()
+    tr.end(
+        res_span, cache_hit=False, kind=family, depth=best_depth,
+        source="predicted", predicted_s=decision.predicted_s,
         **{f"terms.{t}": v for t, v in terms.items()},
     )
     return decision

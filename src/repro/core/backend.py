@@ -27,12 +27,17 @@ from repro.obs import tracer as obs_tracer
 __all__ = [
     "MatmulBackend",
     "matmul",
+    "inverse",
+    "solve_triangular",
     "NAIVE_BACKEND",
     "AUTO_BACKEND",
     "resolve_auto",
     "VALID_KINDS",
     "EAGER_ONLY_KINDS",
     "JIT_SAFE_KINDS",
+    "SOLVER_KINDS",
+    "SOLVER_EAGER_ONLY_KINDS",
+    "SOLVER_JIT_SAFE_KINDS",
     "XLA_ASYNC_FLAGS",
     "enable_xla_async_flags",
     "set_default_matmul_precision",
@@ -58,6 +63,18 @@ VALID_KINDS: Tuple[str, ...] = (
 EAGER_ONLY_KINDS: Tuple[str, ...] = ("strassen_oot",)
 JIT_SAFE_KINDS: Tuple[str, ...] = tuple(
     k for k in VALID_KINDS if k not in EAGER_ONLY_KINDS
+)
+
+# Routing kinds of the solver ops (:func:`inverse` /
+# :func:`solve_triangular`): 'dense' is one device LAPACK-style call,
+# 'spin_oot' the SPIN block-recursive pipeline over the tagged block
+# runtime, 'auto' picks per shape against ``device_budget``. Error
+# messages enumerate these tuples dynamically — new kinds can never
+# drift out of the message text.
+SOLVER_KINDS: Tuple[str, ...] = ("dense", "spin_oot", "auto")
+SOLVER_EAGER_ONLY_KINDS: Tuple[str, ...] = ("spin_oot",)
+SOLVER_JIT_SAFE_KINDS: Tuple[str, ...] = tuple(
+    k for k in SOLVER_KINDS if k not in SOLVER_EAGER_ONLY_KINDS
 )
 
 # XLA flags that let the compiler overlap collectives and transfers with
@@ -458,3 +475,190 @@ def _matmul_routed(x, w, backend, w_logical, site, lead, m, k, n):
             constrain_out=c_out,
         )
     return out.reshape(*lead, n)
+
+
+# --------------------------------------------------------------- solver ops
+def _check_solver_kind(kind: str) -> None:
+    if kind not in SOLVER_KINDS:
+        raise ValueError(
+            f"unknown solver kind {kind!r}; "
+            f"valid kinds: {', '.join(SOLVER_KINDS)}"
+        )
+
+
+def _solver_jit_guard(op: str, *arrays) -> None:
+    if any(isinstance(x, jax.core.Tracer) for x in arrays):
+        raise ValueError(
+            f"solver kind 'spin_oot' is a host-resident out-of-core "
+            f"pipeline and cannot run {op} under jit; jit-safe solver "
+            f"kinds: {', '.join(SOLVER_JIT_SAFE_KINDS)}"
+        )
+
+
+def _solver_backend_scheme(backend: MatmulBackend) -> str:
+    """Scheme for the solver's nested multiplies (any backend kind)."""
+    return backend.schemes[0] if backend.schemes else "strassen"
+
+
+def _solver_oot_depth(
+    op: str, n: int, nrhs: int, dtype, backend: MatmulBackend, budget: int,
+    site: Optional[str],
+) -> int:
+    """Autotuned solver depth (cost-modeled, cached, telemetry-recorded)."""
+    from repro.core import autotune
+
+    decision = autotune.autotune_solver(
+        op,
+        n,
+        jnp.dtype(dtype),
+        nrhs=nrhs,
+        oot_budget=budget,
+        max_depth=max(backend.depth, 1) + 8,
+        scheme=_solver_backend_scheme(backend),
+        cache=autotune.process_cache(backend.tuning_cache),
+        site=site,
+    )
+    return decision.depth
+
+
+def inverse(
+    a: jax.Array,
+    backend: MatmulBackend = NAIVE_BACKEND,
+    *,
+    kind: str = "auto",
+    depth: Optional[int] = None,
+    site: Optional[str] = None,
+) -> jax.Array:
+    """Matrix inverse routed through the configured backend.
+
+    ``kind='dense'`` is one device ``jnp.linalg.inv``; ``kind='spin_oot'``
+    runs SPIN block-recursive inversion over the tagged block runtime
+    (host-resident, device bytes capped by ``backend.device_budget``);
+    ``kind='auto'`` picks dense unless the dense op's working set exceeds
+    the budget. The recursion's block multiplies route through this
+    backend's ``kind='auto'`` dispatcher.
+    """
+    _check_solver_kind(kind)
+    if a.ndim != 2 or a.shape[0] != a.shape[1]:
+        raise ValueError(f"inverse needs a square matrix, got {a.shape}")
+    n = a.shape[0]
+    traced = isinstance(a, jax.core.Tracer)
+    if kind == "auto":
+        item = jnp.dtype(jnp.result_type(a, jnp.float32)).itemsize
+        over = (
+            backend.device_budget is not None
+            and 2 * n * n * item > backend.device_budget
+        )
+        kind = "spin_oot" if (over and not traced) else "dense"
+    with obs_tracer.get_tracer().span(
+        "backend.inverse", cat="matmul", n=n, kind=kind, site=site,
+        traced=traced,
+    ):
+        if kind == "dense":
+            return jnp.linalg.inv(a)
+        _solver_jit_guard("inverse", a)
+        import numpy as np
+
+        from repro.blocks.solve import solver_min_depth_for_budget, spin_inverse_oot
+
+        a_h = np.asarray(a)
+        budget = backend.device_budget or _leaf_budget_fallback(n, n, a_h.dtype)
+        if depth is None:
+            depth = max(
+                _solver_oot_depth("inverse", n, n, a_h.dtype, backend, budget, site),
+                solver_min_depth_for_budget(n, budget, a_h.dtype, leaf_kind="inv"),
+            )
+        out, _ = spin_inverse_oot(
+            a_h,
+            depth=depth,
+            budget_bytes=budget,
+            scheme=_solver_backend_scheme(backend),
+            backend=MatmulBackend(
+                kind="auto", depth=2, min_dim=backend.min_dim,
+                precision=resolve_precision(backend),
+            ),
+        )
+        return jnp.asarray(out)
+
+
+def solve_triangular(
+    l: jax.Array,
+    b: jax.Array,
+    backend: MatmulBackend = NAIVE_BACKEND,
+    *,
+    lower: bool = True,
+    kind: str = "auto",
+    depth: Optional[int] = None,
+    site: Optional[str] = None,
+) -> jax.Array:
+    """Triangular solve ``T @ X = B`` routed through the configured backend.
+
+    Same routing contract as :func:`inverse`: 'dense' is one device
+    ``jax.scipy.linalg.solve_triangular``, 'spin_oot' the block-recursive
+    forward/backward substitution whose multiplies re-enter the matmul
+    scheduler, 'auto' picks against ``backend.device_budget``.
+    """
+    _check_solver_kind(kind)
+    if l.ndim != 2 or l.shape[0] != l.shape[1] or b.ndim != 2:
+        raise ValueError(f"bad solve_triangular shapes {l.shape} / {b.shape}")
+    if l.shape[1] != b.shape[0]:
+        raise ValueError(f"bad solve_triangular shapes {l.shape} @ {b.shape}")
+    n, nrhs = l.shape[0], b.shape[1]
+    traced = isinstance(l, jax.core.Tracer) or isinstance(b, jax.core.Tracer)
+    if kind == "auto":
+        item = jnp.dtype(jnp.result_type(l, b, jnp.float32)).itemsize
+        over = (
+            backend.device_budget is not None
+            and (n * n + 2 * n * nrhs) * item > backend.device_budget
+        )
+        kind = "spin_oot" if (over and not traced) else "dense"
+    with obs_tracer.get_tracer().span(
+        "backend.solve", cat="matmul", n=n, nrhs=nrhs, kind=kind,
+        lower=lower, site=site, traced=traced,
+    ):
+        if kind == "dense":
+            import jax.scipy.linalg as jsl
+
+            return jsl.solve_triangular(l, b, lower=lower)
+        _solver_jit_guard("solve_triangular", l, b)
+        import numpy as np
+
+        from repro.blocks.solve import (
+            solver_min_depth_for_budget,
+            triangular_solve_oot,
+        )
+
+        l_h, b_h = np.asarray(l), np.asarray(b)
+        dtype = np.result_type(l_h.dtype, b_h.dtype)
+        budget = backend.device_budget or _leaf_budget_fallback(n, nrhs, dtype)
+        if depth is None:
+            depth = max(
+                _solver_oot_depth("solve", n, nrhs, dtype, backend, budget, site),
+                solver_min_depth_for_budget(
+                    n, budget, dtype, nrhs=nrhs, leaf_kind="trsm_lower"
+                ),
+            )
+        out, _ = triangular_solve_oot(
+            l_h,
+            b_h,
+            lower=lower,
+            depth=depth,
+            budget_bytes=budget,
+            scheme=_solver_backend_scheme(backend),
+            backend=MatmulBackend(
+                kind="auto", depth=2, min_dim=backend.min_dim,
+                precision=resolve_precision(backend),
+            ),
+        )
+        return jnp.asarray(out)
+
+
+def _leaf_budget_fallback(n: int, nrhs: int, dtype) -> int:
+    """Budget when a solver is forced out-of-core without device_budget:
+    one depth-1 dense leaf's working set (mirrors _matmul_oot's single
+    pipelined-slot default)."""
+    import numpy as np
+
+    item = np.dtype(np.result_type(np.dtype(dtype), np.float32)).itemsize
+    half = -(-n // 2)
+    return max(2 * half * half, half * half + 2 * half * nrhs) * item

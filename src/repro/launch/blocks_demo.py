@@ -25,6 +25,13 @@ import numpy as np
 
 
 def main():
+    # Scheme choices come from the plan registry, so a newly registered
+    # bilinear plan is immediately drivable from this CLI.
+    from repro.blocks.plan import BilinearPlan, get_plan, plan_names
+
+    schemes = [
+        n for n in plan_names() if isinstance(get_plan(n), BilinearPlan)
+    ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n", type=int, default=1024, help="matrix side (square)")
     ap.add_argument("--m", type=int, default=0, help="rows of A (default --n)")
@@ -39,7 +46,7 @@ def main():
     ap.add_argument("--store-root", default=None,
                     help="spill directory for --store memmap")
     ap.add_argument("--dtype", choices=["float32", "bfloat16"], default="float32")
-    ap.add_argument("--scheme", choices=["strassen", "winograd"], default="strassen")
+    ap.add_argument("--scheme", choices=schemes, default="strassen")
     ap.add_argument("--leaf-backend", default="auto",
                     help="matmul routing kind for the leaf waves")
     ap.add_argument("--no-prefetch", action="store_true",

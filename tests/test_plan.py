@@ -1,0 +1,298 @@
+"""Recursive-plan layer: schema algebra round-trips (hypothesis), the
+bit-identical matmul plan extraction, registry semantics, and validation."""
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the vendored grid shim
+    from _propshim import given, settings, strategies as st
+
+from repro.blocks import plan as planmod
+from repro.blocks import tags
+from repro.blocks.plan import (
+    BilinearPlan,
+    DataflowPlan,
+    SPIN_INVERSE,
+    Step,
+    TRSM_LOWER,
+    TRSM_UPPER,
+    apply_combine_schema,
+    apply_divide_schema,
+    as_bilinear_plan,
+    expand_terms,
+    get_plan,
+    matmul_plan,
+    plan_names,
+    register_plan,
+    select_part,
+)
+from repro.core.coefficients import get_scheme, leaf_tag_path
+
+
+# -- schema round-trips (property) ----------------------------------------
+#
+# Strategy: build an integer *unimodular* divide schema as a product of
+# elementary row operations on I_4 and track its exact integer inverse.
+# On integer-valued f32 inputs (exact in f32 well below 2**24) the
+# divide -> combine round trip is then bit-exact, which is precisely the
+# algebraic well-formedness contract the scheduler relies on.
+
+
+def _elementary_schema(seed: int, n_ops: int):
+    """(divide, combine) integer 4x4 tables with combine @ divide == I."""
+    rng = np.random.default_rng(seed)
+    fwd = np.eye(4, dtype=np.float64)
+    ops = []
+    for _ in range(n_ops):
+        i, j = rng.choice(4, size=2, replace=False)
+        c = float(rng.choice([-2, -1, 1, 2]))
+        fwd[i] += c * fwd[j]
+        ops.append((int(i), int(j), c))
+    inv = np.eye(4, dtype=np.float64)
+    for i, j, c in reversed(ops):
+        inv[i] -= c * inv[j]
+    return fwd, inv
+
+
+@given(
+    seed=st.integers(0, 2**20),
+    n_ops=st.integers(0, 6),
+    half=st.sampled_from([1, 2, 4, 8]),
+)
+@settings(max_examples=20, deadline=None)
+def test_integer_schema_round_trip_is_bit_exact(seed, n_ops, half):
+    divide, combine = _elementary_schema(seed, n_ops)
+    assert np.array_equal(combine @ divide, np.eye(4))
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    x = rng.integers(-64, 64, size=(2 * half, 2 * half)).astype(np.float32)
+    children = apply_divide_schema(x, divide.astype(np.float32))
+    back = apply_combine_schema(children, combine.astype(np.float32))
+    # Bit-exact, not allclose: elementary integer schemas on
+    # integer-valued f32 inputs never round.
+    assert back.dtype == x.dtype
+    assert np.array_equal(back, x)
+
+
+@given(seed=st.integers(0, 2**20), depth=st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_expand_terms_matches_repeated_divide(seed, depth):
+    """The closed-form tag expansion equals actually dividing ``depth`` times."""
+    scheme = get_scheme("strassen")
+    rng = np.random.default_rng(seed)
+    half = 1 << depth
+    x = rng.integers(-8, 8, size=(2 * half, 2 * half)).astype(np.float32)
+    m_path = tuple(int(d) for d in rng.integers(0, scheme.rank, size=depth))
+    # Walk the divide stages level by level.
+    block = x
+    for digit in m_path:
+        block = apply_divide_schema(block, scheme.a_coef)[digit]
+    # Closed form: signed sum of root quadrant-path blocks.
+    acc = np.zeros_like(block)
+    for q_path, coef in expand_terms(m_path, scheme.a_coef):
+        sub = x
+        for q in q_path:
+            sub = planmod._quadrants(sub)[q]
+        acc = acc + np.float32(coef) * sub
+    assert np.array_equal(acc, block)
+
+
+# -- bit-identical extraction of the matmul plans --------------------------
+
+
+def _reference_terms(coef, m_path):
+    """Pre-refactor tensor-product expansion, reimplemented inline."""
+    terms = [((), 1.0)]
+    for digit in m_path:
+        terms = [
+            (qp + (q,), c * float(coef[digit, q]))
+            for qp, c in terms
+            for q in range(4)
+            if float(coef[digit, q]) != 0.0
+        ]
+    return terms
+
+
+@pytest.mark.parametrize("scheme_name", ["strassen", "winograd", "naive8"])
+def test_matmul_plan_reproduces_tag_streams_verbatim(scheme_name):
+    """Every leaf path's operand/combine term stream is unchanged by the
+    plan refactor — same order, same paths, same coefficients."""
+    scheme = get_scheme(scheme_name)
+    p = matmul_plan(scheme)
+    depth = 2
+    for m_path in itertools.product(range(scheme.rank), repeat=depth):
+        for side, coef, operand in (
+            ("a", scheme.a_coef, "A"),
+            ("b", scheme.b_coef, "B"),
+        ):
+            want = _reference_terms(coef, m_path)
+            assert p.operand_terms(m_path, operand) == want
+            assert tags.operand_terms(m_path, scheme, side) == want
+        want_c = _reference_terms(scheme.c_coef.T, m_path)
+        assert p.combine_terms(m_path) == want_c
+        assert tags.combine_terms(m_path, scheme) == want_c
+
+
+def test_strassen_leaf_tag_paths_enumerate_plan_rank():
+    scheme = get_scheme("strassen")
+    p = matmul_plan(scheme)
+    depth = 2
+    paths = [leaf_tag_path(i, depth) for i in range(scheme.rank**depth)]
+    assert sorted(paths) == sorted(
+        itertools.product(range(p.rank), repeat=depth)
+    )
+
+
+def test_matmul_plan_shares_scheme_arrays():
+    """Shared, not copied: the guarantee behind bit-identical refactor."""
+    scheme = get_scheme("strassen")
+    p = matmul_plan("strassen")
+    assert p.divide_coef["A"] is scheme.a_coef
+    assert p.divide_coef["B"] is scheme.b_coef
+    assert p.combine_coef is scheme.c_coef
+    assert p.scheme is scheme
+
+
+def test_scheduler_accepts_plan_and_matches_scheme_path():
+    from repro.blocks.scheduler import strassen_oot_matmul
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((128, 128)).astype(np.float32)
+    b = rng.standard_normal((128, 128)).astype(np.float32)
+    kwargs = dict(depth=2, budget_bytes=1 << 20)
+    via_scheme, _ = strassen_oot_matmul(a, b, scheme="strassen", **kwargs)
+    via_plan, stats = strassen_oot_matmul(
+        a, b, plan=matmul_plan("strassen"), **kwargs
+    )
+    assert np.array_equal(via_scheme, via_plan)
+    assert stats.op == "matmul"
+
+
+# -- registry & coercion ---------------------------------------------------
+
+
+def test_registry_has_matmul_and_solver_plans():
+    names = plan_names()
+    for want in (
+        "strassen", "winograd", "naive8",
+        "spin_inverse", "spin_trsm_lower", "spin_trsm_upper",
+    ):
+        assert want in names
+    assert get_plan("spin_inverse") is SPIN_INVERSE
+    assert get_plan("spin_trsm_lower") is TRSM_LOWER
+    assert get_plan("spin_trsm_upper") is TRSM_UPPER
+
+
+def test_get_plan_unknown_name():
+    with pytest.raises(ValueError, match="unknown recursive plan"):
+        get_plan("lu_decomposition")
+
+
+def test_as_bilinear_plan_rejects_dataflow_plans():
+    with pytest.raises(ValueError, match="not wave-schedulable"):
+        as_bilinear_plan("spin_inverse")
+
+
+def test_as_bilinear_plan_accepts_scheme_and_name():
+    scheme = get_scheme("winograd")
+    assert as_bilinear_plan("winograd").scheme is scheme
+    assert as_bilinear_plan(scheme).scheme is scheme
+    p = matmul_plan("naive8")
+    assert as_bilinear_plan(p) is p
+
+
+# -- validation ------------------------------------------------------------
+
+
+def test_bilinear_plan_validate_rejects_bad_shapes():
+    scheme = get_scheme("strassen")
+    bad = BilinearPlan(
+        name="bad", op="matmul", operands=("A", "B"), result="C",
+        leaf_kind="matmul", scheme=scheme,
+        divide_coef={"A": scheme.a_coef, "B": scheme.b_coef[:, :3]},
+        combine_coef=scheme.c_coef,
+    )
+    with pytest.raises(ValueError, match="divide schema"):
+        bad.validate()
+    mismatched = BilinearPlan(
+        name="bad2", op="matmul", operands=("A", "B"), result="C",
+        leaf_kind="matmul", scheme=scheme,
+        divide_coef={"A": scheme.a_coef},
+        combine_coef=scheme.c_coef,
+    )
+    with pytest.raises(ValueError, match="must match operands"):
+        mismatched.validate()
+
+
+def test_dataflow_plan_validate_rejects_undefined_symbols():
+    bad = DataflowPlan(
+        name="bad_flow", op="inverse", operands=("A",), result="X",
+        leaf_kind="inv",
+        divide=(("A11", ("A", "q0")),),
+        program=(Step("matmul", out="T", args=("A11", "GHOST")),),
+        combine=(("q0", "T"),),
+    )
+    with pytest.raises(ValueError, match="undefined symbols"):
+        bad.validate()
+    # register_plan validates before inserting, so the name never lands.
+    with pytest.raises(ValueError, match="undefined symbols"):
+        register_plan(bad)
+    with pytest.raises(ValueError, match="unknown recursive plan"):
+        get_plan("bad_flow")
+
+
+def test_dataflow_plan_validate_rejects_bad_selector():
+    bad = DataflowPlan(
+        name="bad_sel", op="inverse", operands=("A",), result="X",
+        leaf_kind="inv",
+        divide=(("A11", ("A", "q7")),),
+        program=(),
+        combine=(("q0", None),),
+    )
+    with pytest.raises(ValueError, match="unknown .*selector"):
+        bad.validate()
+
+
+def test_spin_plans_are_well_formed():
+    for p in (SPIN_INVERSE, TRSM_LOWER, TRSM_UPPER):
+        p.validate()
+    assert SPIN_INVERSE.recursions == 2
+    assert TRSM_LOWER.recursions == 2
+    assert SPIN_INVERSE.leaf_kind == "inv"
+    assert TRSM_LOWER.operands == ("L", "B")
+
+
+def test_select_part_quadrants_and_row_halves():
+    x = np.arange(16, dtype=np.float32).reshape(4, 4)
+    assert np.array_equal(select_part(x, "q0"), x[:2, :2])
+    assert np.array_equal(select_part(x, "q3"), x[2:, 2:])
+    assert np.array_equal(select_part(x, "r1"), x[2:])
+    with pytest.raises(ValueError, match="unknown part selector"):
+        select_part(x, "z9")
+
+
+def test_spin_inverse_program_algebra_on_dense_blocks():
+    """Execute SPIN_INVERSE's step program with plain numpy at one level
+    and compare against the dense inverse — the plan *description* is
+    the algorithm, independent of any scheduler."""
+    rng = np.random.default_rng(3)
+    n = 64
+    g = rng.standard_normal((n, n)).astype(np.float64)
+    a = g @ g.T / n + 2.0 * np.eye(n)
+    syms = {
+        sym: select_part(a, sel).copy()
+        for sym, (_, sel) in SPIN_INVERSE.divide
+    }
+    for step in SPIN_INVERSE.program:
+        if step.kind == "recurse":
+            syms[step.out] = np.linalg.inv(syms[step.args[0]])
+        elif step.kind == "matmul":
+            syms[step.out] = step.alpha * (syms[step.args[0]] @ syms[step.args[1]])
+        else:
+            syms[step.out] = sum(c * syms[s] for s, c in step.terms)
+    out = np.zeros_like(a)
+    for sel, sym in SPIN_INVERSE.combine:
+        select_part(out, sel)[...] = syms[sym]
+    np.testing.assert_allclose(out, np.linalg.inv(a), rtol=0, atol=1e-9)

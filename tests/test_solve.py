@@ -1,0 +1,381 @@
+"""SPIN block-recursive solvers on the recursive-plan runtime: parity
+under capped budgets across stores, chaos healing, span/telemetry op
+threading, backend-level routing, and the solver autotune families."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro import obs
+from repro.blocks.solve import (
+    SolveScheduler,
+    solver_min_depth_for_budget,
+    spin_inverse_oot,
+    triangular_solve_oot,
+)
+from repro.core import autotune
+from repro.core.autotune import Calibration, TuningCache
+from repro.core.backend import (
+    SOLVER_KINDS,
+    SOLVER_JIT_SAFE_KINDS,
+    VALID_KINDS,
+    MatmulBackend,
+    inverse,
+    solve_triangular,
+)
+
+RNG = np.random.default_rng(0)
+
+# Budget small enough that a 256^2 f32 dense-inverse working set
+# (2 * 256 KiB) cannot fit — every sized test below goes out-of-core
+# and its nested multiplies run multi-wave staging.
+BUDGET = 96 << 10
+
+CALIB = Calibration(t_flop=1e-11, t_elem=1e-9, device_kind="test", device_count=1)
+
+
+@pytest.fixture(autouse=True)
+def _synthetic_calibration(monkeypatch):
+    """No micro-benchmarks and no cross-test process-cache leakage."""
+    monkeypatch.setattr(autotune, "_CALIBRATION", CALIB)
+    monkeypatch.setattr(autotune, "_PROCESS_CACHES", {})
+
+
+def _spd(n, dtype=np.float32):
+    g = RNG.standard_normal((n, n)).astype(np.float32)
+    return (g @ g.T / n + 2.0 * np.eye(n, dtype=np.float32)).astype(dtype)
+
+
+def _tri(n, lower=True, dtype=np.float32):
+    g = RNG.standard_normal((n, n)).astype(np.float32)
+    t = np.tril(g) if lower else np.triu(g)
+    return (t / np.sqrt(n) + 2.0 * np.eye(n, dtype=np.float32)).astype(dtype)
+
+
+def _rel_err(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = float(np.abs(want).max()) or 1.0
+    return float(np.abs(got - want).max() / scale)
+
+
+# ------------------------------------------------------ out-of-core parity
+
+
+@pytest.mark.parametrize("store", ["dict", "arena", "memmap"])
+def test_spin_inverse_parity_across_stores(store, tmp_path):
+    a = _spd(256)
+    out, stats = spin_inverse_oot(
+        a, budget_bytes=BUDGET, store=store,
+        store_root=str(tmp_path) if store == "memmap" else None,
+    )
+    want = np.asarray(jnp.linalg.inv(jnp.asarray(a)))
+    assert _rel_err(out, want) <= 1e-5
+    assert out.shape == a.shape and out.dtype == a.dtype
+    assert stats.op == "inverse"
+    assert stats.oot_runs > 0  # multiplies re-entered the oot scheduler
+    assert stats.waves >= 2  # ...and needed real staging waves
+    assert 0 < stats.peak_device_bytes <= BUDGET
+
+
+@pytest.mark.parametrize("lower", [True, False])
+def test_triangular_solve_parity(lower):
+    t = _tri(256, lower=lower)
+    b = RNG.standard_normal((256, 128)).astype(np.float32)
+    out, stats = triangular_solve_oot(
+        t, b, lower=lower, budget_bytes=BUDGET
+    )
+    want = np.asarray(jsl.solve_triangular(
+        jnp.asarray(t), jnp.asarray(b), lower=lower
+    ))
+    assert _rel_err(out, want) <= 1e-5
+    assert stats.op == "solve"
+    assert stats.n == 128  # stats carry the RHS panel width
+    assert stats.oot_runs > 0
+    assert stats.peak_device_bytes <= BUDGET
+
+
+def test_bf16_inverse_parity():
+    import ml_dtypes
+
+    a = _spd(192, dtype=ml_dtypes.bfloat16)
+    out, stats = spin_inverse_oot(a, budget_bytes=BUDGET)
+    want = np.asarray(
+        jnp.linalg.inv(jnp.asarray(a, jnp.float32))
+    )
+    assert _rel_err(out, want) <= 1e-2
+    assert out.dtype == a.dtype
+    assert stats.stage_dtype == "float32"  # accumulation stays f32
+
+
+def test_non_power_of_two_size_pads_with_identity():
+    a = _spd(200)  # not divisible by 2**depth
+    out, _ = spin_inverse_oot(a, depth=2, budget_bytes=BUDGET)
+    want = np.asarray(jnp.linalg.inv(jnp.asarray(a)))
+    assert out.shape == (200, 200)
+    assert _rel_err(out, want) <= 1e-5
+
+
+# ------------------------------------------------------- depth selection
+
+
+def test_solver_min_depth_for_budget():
+    f32 = np.float32
+    # A 64^2 f32 inverse leaf needs 2*64*64*4 = 32 KiB.
+    assert solver_min_depth_for_budget(64, 32 << 10, f32) == 0
+    assert solver_min_depth_for_budget(128, 32 << 10, f32) == 1
+    assert solver_min_depth_for_budget(256, 32 << 10, f32) == 2
+    with pytest.raises(ValueError, match="budget_bytes"):
+        solver_min_depth_for_budget(64, 0, f32)
+    with pytest.raises(ValueError, match="no depth"):
+        solver_min_depth_for_budget(1 << 20, 16, f32, max_depth=3)
+
+
+def test_trsm_leaf_keeps_full_rhs_width():
+    """The RHS splits by rows only: leaf columns never shrink, so a wide
+    panel forces deeper recursion than a narrow one."""
+    f32 = np.float32
+    narrow = solver_min_depth_for_budget(
+        256, 48 << 10, f32, nrhs=16, leaf_kind="trsm_lower"
+    )
+    wide = solver_min_depth_for_budget(
+        256, 48 << 10, f32, nrhs=4096, leaf_kind="trsm_lower"
+    )
+    assert wide > narrow
+
+
+def test_leaf_too_big_for_budget_raises():
+    a = _spd(256)
+    with pytest.raises(ValueError, match="cannot hold"):
+        spin_inverse_oot(a, depth=0, budget_bytes=BUDGET)
+
+
+def test_scheduler_rejects_bilinear_plan():
+    from repro.blocks.plan import matmul_plan
+
+    with pytest.raises((TypeError, ValueError)):
+        SolveScheduler(plan=matmul_plan("strassen"), depth=1, budget_bytes=BUDGET)
+
+
+# ------------------------------------------------------------ chaos parity
+
+
+def test_chaos_heals_bit_identically():
+    from repro.blocks.recovery import ChaosConfig
+
+    a = _spd(256)
+    clean, _ = spin_inverse_oot(a, budget_bytes=BUDGET)
+    chaos = ChaosConfig(drop=0.05, corrupt=0.02, leaf_fail_rate=0.02, seed=0)
+    healed, stats = spin_inverse_oot(a, budget_bytes=BUDGET, chaos=chaos)
+    assert stats.injected_faults > 0
+    assert stats.recovered_blocks > 0
+    assert stats.unrecovered_faults == 0
+    assert stats.peak_device_bytes <= BUDGET
+    # Lineage recovery replays the exact computation path: anything short
+    # of bit-identical is a recovery bug, not roundoff.
+    assert np.array_equal(np.asarray(clean), np.asarray(healed))
+
+
+def test_chaos_seeds_differ_per_nested_multiply():
+    """Two multiplies in one run must not see identical fault streams —
+    the per-call seed derivation keeps the harness deterministic but
+    decorrelated. Same config twice, though, is bit-reproducible."""
+    from repro.blocks.recovery import ChaosConfig
+
+    a = _spd(192)
+    chaos = ChaosConfig(drop=0.05, corrupt=0.02, leaf_fail_rate=0.02, seed=7)
+    out1, s1 = spin_inverse_oot(a, budget_bytes=BUDGET, chaos=chaos)
+    out2, s2 = spin_inverse_oot(a, budget_bytes=BUDGET, chaos=chaos)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+    assert s1.injected_faults == s2.injected_faults
+
+
+# ------------------------------------------------- spans & op threading
+
+
+@pytest.fixture
+def global_tracing():
+    obs.reset_tracing()
+    obs.configure(enabled=True)
+    yield obs.get_tracer()
+    obs.configure(enabled=False)
+    obs.reset_tracing()
+
+
+def test_inverse_root_span_and_nested_matmul_spans(global_tracing):
+    a = _spd(256)
+    _, stats = spin_inverse_oot(a, budget_bytes=BUDGET)
+    spans = obs.get_tracer().snapshot()
+    roots = [s for s in spans if s.name == "oot.inverse"]
+    assert len(roots) == 1  # one solver run, one root
+    assert roots[0].attrs["op"] == "inverse"
+    assert roots[0].attrs["oot_runs"] == stats.oot_runs
+    # Nested out-of-core multiplies keep their own oot.matmul roots and
+    # wave lanes — the plan layer renames nothing about the matmul path.
+    assert len([s for s in spans if s.name == "oot.matmul"]) == stats.oot_runs
+    assert any(s.name == "leaf.inv" for s in spans)
+    assert any(s.name == "solve.node" for s in spans)
+
+
+def test_solve_root_span(global_tracing):
+    t = _tri(192)
+    b = RNG.standard_normal((192, 64)).astype(np.float32)
+    triangular_solve_oot(t, b, budget_bytes=BUDGET)
+    roots = [s for s in obs.get_tracer().snapshot() if s.name == "oot.solve"]
+    assert len(roots) == 1
+    assert roots[0].attrs["op"] == "solve"
+    assert roots[0].attrs["plan"] == "spin_trsm_lower"
+
+
+def test_fault_counters_carry_op(global_tracing):
+    from repro.blocks.recovery import ChaosConfig
+    from repro.obs import metrics as obs_metrics
+
+    obs_metrics.reset_metrics()
+    a = _spd(256)
+    chaos = ChaosConfig(drop=0.0, corrupt=0.0, leaf_fail_rate=0.1, seed=1)
+    _, stats = spin_inverse_oot(a, budget_bytes=BUDGET, chaos=chaos)
+    assert stats.leaf_retries > 0
+    # The nested multiplies run the matmul plan, so their retry counter
+    # is attributed to the matmul op — the solver op never masks it.
+    mx = obs_metrics.get_metrics()
+    assert mx.counter("fault.retries.matmul").value == stats.leaf_retries
+
+
+def test_stats_ring_carries_op():
+    from repro.blocks.scheduler import recent_oot_stats, reset_oot_stats
+
+    reset_oot_stats()
+    a = _spd(192)
+    spin_inverse_oot(a, budget_bytes=BUDGET)
+    ops = {row["op"] for row in recent_oot_stats()}
+    assert "inverse" in ops  # the solver run itself
+    assert "matmul" in ops  # its nested multiplies
+
+
+# ----------------------------------------------------- backend-level ops
+
+
+def test_backend_inverse_dense_kind():
+    a = jnp.asarray(_spd(64))
+    out = inverse(a, MatmulBackend(kind="naive"), kind="dense")
+    assert np.allclose(np.asarray(out), np.asarray(jnp.linalg.inv(a)))
+
+
+def test_backend_inverse_auto_routes_by_budget():
+    a = jnp.asarray(_spd(256))
+    bk = MatmulBackend(kind="auto", depth=2, device_budget=BUDGET)
+    out = inverse(a, bk, kind="auto")  # 2n^2 bytes > budget -> spin_oot
+    want = np.asarray(jnp.linalg.inv(a))
+    assert _rel_err(out, want) <= 1e-5
+
+
+def test_backend_solve_triangular_spin_oot():
+    t = jnp.asarray(_tri(256))
+    b = jnp.asarray(RNG.standard_normal((256, 64)).astype(np.float32))
+    bk = MatmulBackend(kind="auto", depth=2, device_budget=BUDGET)
+    out = solve_triangular(t, b, bk, lower=True, kind="spin_oot")
+    want = np.asarray(jsl.solve_triangular(t, b, lower=True))
+    assert _rel_err(out, want) <= 1e-5
+
+
+def test_solver_kind_errors_enumerate_valid_kinds():
+    """The message derives from SOLVER_KINDS itself: a new kind added to
+    the tuple shows up in the error without touching the message."""
+    a = jnp.asarray(_spd(16))
+    with pytest.raises(ValueError) as ei:
+        inverse(a, kind="cholesky")
+    for k in SOLVER_KINDS:
+        assert k in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        solve_triangular(a, a, kind="gauss")
+    for k in SOLVER_KINDS:
+        assert k in str(ei.value)
+
+
+def test_matmul_kind_error_enumerates_valid_kinds():
+    with pytest.raises(ValueError) as ei:
+        MatmulBackend(kind="bogus")
+    for k in VALID_KINDS:
+        assert k in str(ei.value)
+
+
+def test_spin_oot_rejects_jit_tracing():
+    bk = MatmulBackend(kind="auto", depth=2, device_budget=BUDGET)
+
+    @jax.jit
+    def f(x):
+        return inverse(x, bk, kind="spin_oot")
+
+    with pytest.raises(ValueError) as ei:
+        f(jnp.asarray(_spd(32)))
+    for k in SOLVER_JIT_SAFE_KINDS:
+        assert k in str(ei.value)
+
+
+def test_auto_under_jit_falls_back_to_dense():
+    """kind='auto' must stay jit-safe even with a tiny budget: tracing
+    cannot host-stage, so auto picks the dense path."""
+    bk = MatmulBackend(kind="auto", depth=2, device_budget=BUDGET)
+    a = jnp.asarray(_spd(256))
+
+    @jax.jit
+    def f(x):
+        return inverse(x, bk, kind="auto")
+
+    out = f(a)
+    assert np.allclose(
+        np.asarray(out), np.asarray(jnp.linalg.inv(a)), atol=1e-4
+    )
+
+
+# ------------------------------------------------------- autotune family
+
+
+def test_autotune_solver_families_and_cache():
+    cache = TuningCache()
+    d1 = autotune.autotune_solver(
+        "inverse", 512, jnp.float32, oot_budget=BUDGET, max_depth=10,
+        cache=cache, calibration=CALIB,
+    )
+    assert d1.kind == "inverse_oot"
+    assert d1.source == "predicted"
+    assert d1.depth >= solver_min_depth_for_budget(512, BUDGET, np.float32)
+    d2 = autotune.autotune_solver(
+        "inverse", 512, jnp.float32, oot_budget=BUDGET, max_depth=10,
+        cache=cache, calibration=CALIB,
+    )
+    assert d2.source == "cache"
+    assert d2.depth == d1.depth
+    ds = autotune.autotune_solver(
+        "solve", 512, jnp.float32, nrhs=128, oot_budget=BUDGET, max_depth=10,
+        cache=cache, calibration=CALIB,
+    )
+    assert ds.kind == "solve_oot"
+    assert len(cache.entries) == 2  # solver keys don't collide
+
+
+def test_autotune_solver_unknown_op():
+    with pytest.raises(ValueError, match="unknown solver op"):
+        autotune.autotune_solver("lu", 256, jnp.float32)
+
+
+def test_predict_solver_terms_scale_with_depth():
+    """SPIN's arithmetic is depth-invariant (the six half-size multiplies
+    telescope to the same 2n^3), but every added level stages more
+    traffic and host adds — so among feasible depths the tuner prefers
+    the shallowest, which is exactly the budget-respecting choice."""
+    t1 = autotune.predict_solver_terms("inverse", 1024, 1, CALIB)
+    t3 = autotune.predict_solver_terms("inverse", 1024, 3, CALIB)
+    assert set(t1) == {"flop_s", "elem_s", "h2d_s"}
+    assert t3["flop_s"] == pytest.approx(t1["flop_s"])
+    assert t3["h2d_s"] > t1["h2d_s"]
+    assert t3["elem_s"] > t1["elem_s"]
+    assert autotune.predict_solver_seconds(
+        "inverse", 1024, 1, CALIB
+    ) < autotune.predict_solver_seconds("inverse", 1024, 3, CALIB)
+    # Depth 0 stages the whole dense leaf with no compute to hide behind,
+    # so its traffic term is fully exposed — larger than depth 1's.
+    t0 = autotune.predict_solver_terms("inverse", 1024, 0, CALIB)
+    assert t0["h2d_s"] > t1["h2d_s"]
